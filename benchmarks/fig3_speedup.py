@@ -1,0 +1,33 @@
+"""Paper Fig. 3: HFL-vs-FL latency speedup vs MUs-per-cluster, H in {2,4,6}.
+
+Sparsity parameters as in the paper: phi_mu_ul=0.99, others 0.9.
+Emits CSV rows: mus_per_cluster,H,t_fl_s,t_hfl_s,speedup.
+"""
+import numpy as np
+
+from repro.wireless import HCNTopology, LatencyParams, fl_latency, hfl_latency
+
+PHIS = dict(phi_mu_ul=0.99, phi_sbs_dl=0.9, phi_sbs_ul=0.9, phi_mbs_dl=0.9)
+
+
+def run(mus_list=(2, 4, 6), Hs=(2, 4, 6), seed=1):
+    rows = []
+    lp = LatencyParams()
+    for mus in mus_list:
+        topo = HCNTopology(seed=seed)
+        pos, cid = topo.drop_users(mus)
+        t_fl, _ = fl_latency(topo, pos, lp, phi_ul=PHIS["phi_mu_ul"],
+                             phi_dl=PHIS["phi_mbs_dl"])
+        for H in Hs:
+            t_hfl, _ = hfl_latency(topo, pos, cid, lp, H=H, **PHIS)
+            rows.append(("fig3", f"mus={mus},H={H}", t_fl, t_hfl, t_fl / t_hfl))
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r[0]},{r[1]},t_fl={r[2]:.4f}s,t_hfl={r[3]:.4f}s,speedup={r[4]:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Paper Fig. 4: latency speedup of HFL over FL as a function of the
+path-loss exponent alpha (speedup grows with alpha)."""
+import numpy as np
+
+from repro.wireless import HCNTopology, LatencyParams, fl_latency, hfl_latency
+
+
+def run(alphas=(2.2, 2.5, 2.8, 3.1, 3.4), H=4, mus=4, seed=1):
+    rows = []
+    topo = HCNTopology(seed=seed)
+    pos, cid = topo.drop_users(mus)
+    for alpha in alphas:
+        lp = LatencyParams(alpha=alpha)
+        t_fl, _ = fl_latency(topo, pos, lp)
+        t_hfl, _ = hfl_latency(topo, pos, cid, lp, H=H)
+        rows.append(("fig4", f"alpha={alpha}", t_fl, t_hfl, t_fl / t_hfl))
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r[0]},{r[1]},t_fl={r[2]:.3f}s,t_hfl={r[3]:.3f}s,speedup={r[4]:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

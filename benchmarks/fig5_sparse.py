@@ -1,0 +1,34 @@
+"""Paper Fig. 5a/5b: latency gain from sparsification, for FL and HFL,
+vs number of MUs per cluster."""
+import numpy as np
+
+from repro.wireless import HCNTopology, LatencyParams, fl_latency, hfl_latency
+
+PHIS = dict(phi_mu_ul=0.99, phi_sbs_dl=0.9, phi_sbs_ul=0.9, phi_mbs_dl=0.9)
+
+
+def run(mus_list=(2, 4, 6), H=4, seed=1):
+    rows = []
+    lp = LatencyParams()
+    for mus in mus_list:
+        topo = HCNTopology(seed=seed)
+        pos, cid = topo.drop_users(mus)
+        fl_dense, _ = fl_latency(topo, pos, lp)
+        fl_sparse, _ = fl_latency(topo, pos, lp, phi_ul=PHIS["phi_mu_ul"],
+                                  phi_dl=PHIS["phi_mbs_dl"])
+        hfl_dense, _ = hfl_latency(topo, pos, cid, lp, H=H)
+        hfl_sparse, _ = hfl_latency(topo, pos, cid, lp, H=H, **PHIS)
+        rows.append(("fig5a", f"FL,mus={mus}", fl_dense, fl_sparse,
+                     fl_dense / fl_sparse))
+        rows.append(("fig5b", f"HFL,mus={mus}", hfl_dense, hfl_sparse,
+                     hfl_dense / hfl_sparse))
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r[0]},{r[1]},dense={r[2]:.3f}s,sparse={r[3]:.3f}s,gain={r[4]:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""§Perf hillclimbing experiments (hypothesis -> change -> re-lower -> record).
+
+Three selected pairs (see EXPERIMENTS.md §Perf for the selection rationale):
+  A. mamba2-780m x train_4k  — worst roofline fraction (memory/compute ~33x):
+     SSD chunk-size sweep (traffic ~ a*Q + b/Q napkin model).
+  B. deepseek-v2-236b x train_4k — doesn't fit HBM: HFL buffer dtype +
+     capacity factor + remat levers.
+  C. granite-34b sync (2-pod) — the paper's own technique: dense vs sparse
+     vs quantized_sparse cross-pod consensus collective bytes.
+
+Usage: PYTHONPATH=src:. python -m benchmarks.perf_hillclimb --exp A [--out f.json]
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_shape
+from repro.configs.base import HFLConfig
+from repro.launch import steps as st
+from repro.launch.dryrun import _record
+from repro.launch.mesh import axis_size, make_production_mesh
+
+
+def lower_train(cfg, shape, *, multi_pod=False, hfl_kw=None, buffer_dtype=jnp.float32,
+                optimizer=None):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    data = axis_size(mesh, "data")
+    n_pods = axis_size(mesh, "pod")
+    hfl = HFLConfig(num_clusters=n_pods, mus_per_cluster=data, period=4,
+                    sync_mode="sparse", **(hfl_kw or {}))
+    with mesh:
+        state_sds, batch_sds, pspecs = st.train_input_specs(cfg, shape, mesh, hfl)
+        if buffer_dtype != jnp.float32:
+            # re-type the HFL buffers in the input specs
+            def retype(t):
+                return jax.tree.map(
+                    lambda l: jax.ShapeDtypeStruct(l.shape, jnp.dtype(buffer_dtype),
+                                                   sharding=l.sharding), t)
+            state_sds = state_sds._replace(w_ref=retype(state_sds.w_ref),
+                                           eps=retype(state_sds.eps),
+                                           e=retype(state_sds.e))
+        bax = ("data",) if (shape.global_batch // hfl.num_clusters) % data == 0 else None
+        step = st.build_train_step(cfg, groups=data, batch_axes=bax,
+                                   optimizer=optimizer)
+        t0 = time.time()
+        compiled = jax.jit(step).lower(state_sds, batch_sds).compile()
+        rec = _record(compiled, mesh)
+        rec["compile_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def lower_sync(cfg, *, sync_mode="sparse", phi_ul=0.9, phi_dl=0.9):
+    mesh = make_production_mesh(multi_pod=True)
+    data = axis_size(mesh, "data")
+    hfl = HFLConfig(num_clusters=2, mus_per_cluster=data, period=4,
+                    sync_mode=sync_mode, phi_sbs_ul=phi_ul, phi_mbs_dl=phi_dl)
+    shape = get_shape("train_4k")
+    with mesh:
+        state_sds, _, pspecs = st.train_input_specs(cfg, shape, mesh, hfl)
+        sync = st.build_sync_step(hfl, mesh, pspecs)
+        compiled = jax.jit(sync).lower(state_sds).compile()
+        return _record(compiled, mesh)
+
+
+def summarize(tag, rec):
+    c = rec["cost"]
+    m = rec["memory"]
+    coll = {k: v["bytes"] for k, v in rec["collectives"].items()}
+    row = {
+        "tag": tag,
+        "flops_per_dev": c["flops"],
+        "bytes_per_dev": c["bytes_accessed"],
+        "coll_bytes": coll,
+        "args_gib": round(m["argument_bytes"] / 2**30, 2),
+        "temp_gib": round(m["temp_bytes"] / 2**30, 2),
+        "t_compute_s": c["flops"] / 197e12,
+        "t_memory_s": c["bytes_accessed"] / 819e9,
+        # per-device already (post-SPMD module shapes)
+        "t_coll_s": sum((2.0 if k == "all-reduce" else 1.0) * v
+                        for k, v in coll.items()) / 50e9,
+    }
+    print(json.dumps(row), flush=True)
+    return row
+
+
+def exp_A():
+    """Mamba2 SSD chunk-size sweep. Hypothesis: HBM traffic ~ a*Q + b/Q with
+    optimum near Q* = sqrt(2/3 * P * N) ~ 74 for P=64, N=128; the baseline
+    Q=256 overpays on the quadratic intra-chunk tensors."""
+    rows = []
+    base = get_config("mamba2-780m")
+    shape = get_shape("train_4k")
+    for q in (256, 128, 64):
+        cfg = dataclasses.replace(base, ssm_chunk=q)
+        rows.append(summarize(f"mamba2_chunk{q}", lower_train(cfg, shape)))
+    return rows
+
+
+def exp_B():
+    """DeepSeek-V2 memory: (1) baseline f32 HFL buffers (paper-faithful),
+    (2) bf16 buffers, (3) bf16 + tighter MoE capacity 1.0."""
+    rows = []
+    base = get_config("deepseek-v2-236b")
+    shape = get_shape("train_4k")
+    rows.append(summarize("dsv2_base_f32buf", lower_train(base, shape)))
+    rows.append(summarize("dsv2_bf16buf",
+                          lower_train(base, shape, buffer_dtype=jnp.bfloat16)))
+    cfg = dataclasses.replace(base, capacity_factor=1.0)
+    rows.append(summarize("dsv2_bf16buf_cap1.0",
+                          lower_train(cfg, shape, buffer_dtype=jnp.bfloat16)))
+    return rows
+
+
+def exp_C():
+    """Cross-pod consensus for granite-34b: dense all-reduce (hierarchical
+    local-SGD baseline) vs paper's sparse top-k vs beyond-paper quantized
+    sparse and phi=0.99."""
+    rows = []
+    base = get_config("granite-34b")
+    rows.append(summarize("granite_sync_dense", lower_sync(base, sync_mode="dense")))
+    rows.append(summarize("granite_sync_sparse_phi0.9", lower_sync(base)))
+    rows.append(summarize("granite_sync_qsparse_phi0.9",
+                          lower_sync(base, sync_mode="quantized_sparse")))
+    rows.append(summarize("granite_sync_qsparse_phi0.99",
+                          lower_sync(base, sync_mode="quantized_sparse",
+                                     phi_ul=0.99, phi_dl=0.99)))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", required=True, choices=["A", "B", "C"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows = {"A": exp_A, "B": exp_B, "C": exp_C}[args.exp]()
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Roofline analysis (deliverable g): derive the three roofline terms per
+(arch x input shape) from the dry-run artifacts.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = sum over collectives of factor(op) * bytes / link_bw
+
+cost_analysis() is already per-device. Collective bytes are parsed from the
+compiled HLO (result-shape bytes per op); standard ring factors convert to
+per-device wire bytes: all-reduce 2x, all-gather/reduce-scatter/all-to-all
+~1x ((N-1)/N ~ 1), collective-permute 1x.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) for the train shapes;
+decode/prefill use 2*N*D per generated/processed token (fwd only).
+"""
+import argparse
+import json
+import sys
+
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+COLL_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+# total / active params (B) per arch — from configs (active: MoE top-k only)
+PARAMS = {
+    "zamba2-7b": (6.75e9, 6.75e9),
+    "olmo-1b": (1.18e9, 1.18e9),
+    "granite-34b": (33.96e9, 33.96e9),
+    "deepseek-v2-236b": (239.4e9, 28.3e9),   # 2 shared + 6/160 routed + attn
+    "h2o-danube-3-4b": (3.96e9, 3.96e9),
+    "musicgen-medium": (1.37e9, 1.37e9),
+    "mamba2-780m": (0.78e9, 0.78e9),
+    "dbrx-132b": (131.6e9, 36.2e9),          # 4/16 routed + attn
+    "starcoder2-3b": (3.18e9, 3.18e9),
+    "llava-next-34b": (34.4e9, 34.4e9),
+}
+
+TOKENS = {  # tokens processed per step (global)
+    "train_4k": 256 * 4096,
+    "prefill_32k": 32 * 32768,
+    "decode_32k": 128,           # one token per sequence
+    "long_500k": 1,
+}
+
+
+def model_flops(arch: str, shape: str, n_dev: int) -> float:
+    total, active = PARAMS[arch]
+    toks = TOKENS[shape]
+    mult = 6.0 if shape == "train_4k" else 2.0
+    return mult * active * toks / n_dev  # per device
+
+
+def analyze_record(rec):
+    out = []
+    for prog, r in rec.get("programs", {}).items():
+        n_dev = r["n_devices"]
+        t_compute = r["cost"]["flops"] / PEAK_FLOPS
+        t_memory = r["cost"]["bytes_accessed"] / HBM_BW
+        # collective bytes from the post-SPMD module are already per-device
+        coll_bytes = sum(
+            COLL_FACTOR.get(op, 1.0) * v["bytes"]
+            for op, v in r["collectives"].items()
+        )
+        t_coll = coll_bytes / ICI_BW
+        terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+        dom = max(terms, key=terms.get)
+        mf = model_flops(rec["arch"], rec["shape"], n_dev)
+        out.append({
+            "arch": rec["arch"], "shape": rec["shape"], "program": prog,
+            "multi_pod": rec["multi_pod"],
+            "t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dom,
+            "model_flops_per_dev": mf,
+            "useful_flop_ratio": mf / max(r["cost"]["flops"], 1.0),
+            "mem_args_gib": r["memory"]["argument_bytes"] / 2**30,
+            "mem_temp_gib": r["memory"]["temp_bytes"] / 2**30,
+        })
+    return out
+
+
+def run(paths):
+    rows = []
+    for p in paths:
+        with open(p) as f:
+            for rec in json.load(f):
+                if rec.get("status") == "ok":
+                    rows.extend(analyze_record(rec))
+                elif rec.get("status") == "skipped":
+                    rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                                 "program": "-", "multi_pod": rec["multi_pod"],
+                                 "skipped": rec["reason"]})
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifacts", nargs="*",
+                    default=["benchmarks/artifacts/dryrun_1pod.json"])
+    args = ap.parse_args()
+    rows = run(args.artifacts)
+    print("arch,shape,program,mesh,t_compute_s,t_memory_s,t_collective_s,"
+          "dominant,useful_flop_ratio,temp_gib")
+    for r in rows:
+        if "skipped" in r:
+            print(f"{r['arch']},{r['shape']},skipped,,,,,,,  # {r['skipped']}")
+            continue
+        mesh = "2pod512" if r["multi_pod"] else "1pod256"
+        print(f"{r['arch']},{r['shape']},{r['program']},{mesh},"
+              f"{r['t_compute_s']:.3e},{r['t_memory_s']:.3e},"
+              f"{r['t_collective_s']:.3e},{r['dominant']},"
+              f"{r['useful_flop_ratio']:.2f},{r['mem_temp_gib']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Non-IID extension (paper §VI future work): HFL under label-skewed data.
+
+Compares IID vs label-sorted (the paper's "no shuffling" split) vs
+Dirichlet(α=0.3) partitions with the faithful Algorithm-5 engine, measuring
+how the hierarchical consensus + error feedback cope with client drift.
+
+    PYTHONPATH=src python examples/noniid_hfl.py [--steps 100]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HFLConfig
+from repro.core.federated import FaithfulHFL
+from repro.data import (
+    SyntheticImages,
+    partition_dirichlet,
+    partition_iid,
+    partition_label_sorted,
+)
+from repro.models.resnet import init_resnet18, resnet18_forward
+from repro.utils.tree import flatten_to_vector, unflatten_from_vector
+
+PHIS = dict(phi_mu_ul=0.99, phi_sbs_dl=0.9, phi_sbs_ul=0.9, phi_mbs_dl=0.9)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--period", type=int, default=4)
+    args = ap.parse_args()
+
+    params, bn_state = init_resnet18(jax.random.PRNGKey(0), width=0.25)
+    w0, aux = flatten_to_vector(params)
+
+    def loss(w, batch):
+        x, y = batch
+        p = unflatten_from_vector(w, aux)
+        logits, _ = resnet18_forward(p, bn_state, x, train=True)
+        return -jnp.take_along_axis(jax.nn.log_softmax(logits), y[:, None], 1).mean()
+
+    grad_fn = jax.grad(loss)
+    data = SyntheticImages(seed=3)
+    xs, ys = data.sample(4096)
+    xt, yt = data.sample(512, np.random.default_rng(9))
+    hfl = HFLConfig(num_clusters=7, mus_per_cluster=4, period=args.period, **PHIS)
+    K = hfl.total_mus
+
+    splits = {
+        "iid": partition_iid(len(xs), K, np.random.default_rng(1)),
+        "label-sorted (paper)": partition_label_sorted(ys, K),
+        "dirichlet(0.3)": partition_dirichlet(ys, K, alpha=0.3,
+                                              rng=np.random.default_rng(1)),
+    }
+    for name, shards in splits.items():
+        sim = FaithfulHFL(grad_fn=grad_fn, w0=w0, hfl_cfg=hfl,
+                          lr_schedule=lambda t: 0.05)
+        rng = np.random.default_rng(2)
+        for t in range(args.steps):
+            idx = np.stack([rng.choice(s, 16, replace=len(s) < 16) for s in shards])
+            sim.step((jnp.asarray(xs[idx]), jnp.asarray(ys[idx])))
+        p = unflatten_from_vector(sim.global_model, aux)
+        logits, _ = resnet18_forward(p, bn_state, jnp.asarray(xt), train=True)
+        acc = float((logits.argmax(-1) == jnp.asarray(yt)).mean())
+        print(f"  {name:24s} top-1 = {acc*100:5.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Batched serving demo: prefill a batch of prompts, then decode new tokens
+step-by-step against the KV/SSM cache — the ``serve_step`` the decode input
+shapes exercise, on a reduced config.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch mamba2-780m
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.steps import build_decode_step, build_prefill_step
+from repro.models.frontends import fake_frontend_embeds
+from repro.models.transformer import init_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-3-4b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    )
+    fe = fake_frontend_embeds(jax.random.PRNGKey(2), cfg, args.batch) \
+        if cfg.frontend != "none" else None
+
+    prefill_step = jax.jit(build_prefill_step(cfg))
+    decode = jax.jit(build_decode_step(cfg))
+
+    t0 = time.time()
+    logits, cache = prefill_step(params, prompts, fe)
+    print(f"[serve] prefill {args.batch}x{args.prompt_len}: {time.time()-t0:.2f}s")
+
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    generated = [tok]
+    t0 = time.time()
+    for i in range(args.new_tokens - 1):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        generated.append(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(generated, axis=1)
+    assert gen.shape == (args.batch, args.new_tokens)
+    assert not np.isnan(np.asarray(logits, np.float32)).any()
+    print(f"[serve] decoded {args.new_tokens} tokens/seq: "
+          f"{dt/(args.new_tokens-1)*1000:.1f} ms/step")
+    print(f"[serve] sample continuation (seq 0): {np.asarray(gen[0])[:12]}")
+    print("serve_batched OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Pytree checkpointing: msgpack + raw ndarray payloads, atomic writes,
+rotation. Restores onto a target pytree (structure + dtypes from target)."""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {
+        "leaves": [
+            {
+                "dtype": str(np.asarray(l).dtype),
+                "shape": list(np.asarray(l).shape),
+                "data": np.ascontiguousarray(
+                    np.asarray(l, dtype=np.float32)
+                    if jnp.issubdtype(jnp.asarray(l).dtype, jnp.bfloat16)
+                    else np.asarray(l)
+                ).tobytes(),
+            }
+            for l in leaves
+        ],
+    }
+    return msgpack.packb(payload, use_bin_type=True)
+
+
+def save_checkpoint(path: str, step: int, tree, keep: int = 3):
+    os.makedirs(path, exist_ok=True)
+    final = os.path.join(path, f"ckpt_{step:08d}.msgpack")
+    fd, tmp = tempfile.mkstemp(dir=path)
+    with os.fdopen(fd, "wb") as f:
+        f.write(_encode(tree))
+    os.replace(tmp, final)
+    ckpts = sorted(_list_ckpts(path))
+    for s in ckpts[:-keep]:
+        os.remove(os.path.join(path, f"ckpt_{s:08d}.msgpack"))
+    return final
+
+
+def _list_ckpts(path: str):
+    if not os.path.isdir(path):
+        return []
+    out = []
+    for f in os.listdir(path):
+        m = re.fullmatch(r"ckpt_(\d+)\.msgpack", f)
+        if m:
+            out.append(int(m.group(1)))
+    return out
+
+
+def latest_step(path: str):
+    ck = _list_ckpts(path)
+    return max(ck) if ck else None
+
+
+def restore_checkpoint(path: str, target, step: int | None = None):
+    step = step if step is not None else latest_step(path)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {path}")
+    with open(os.path.join(path, f"ckpt_{step:08d}.msgpack"), "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves, treedef = jax.tree.flatten(target)
+    assert len(leaves) == len(payload["leaves"]), "checkpoint/target mismatch"
+    new = []
+    for tgt, rec in zip(leaves, payload["leaves"]):
+        src_dt = np.float32 if rec["dtype"] == "bfloat16" else np.dtype(rec["dtype"])
+        arr = np.frombuffer(rec["data"], dtype=src_dt).reshape(rec["shape"])
+        new.append(jnp.asarray(arr, dtype=jnp.asarray(tgt).dtype))
+    return jax.tree.unflatten(treedef, new), step

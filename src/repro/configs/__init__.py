@@ -1,0 +1,33 @@
+"""Architecture registry: ``get_config("<arch-id>")`` / ``--arch <id>``."""
+from repro.configs.base import ModelConfig, ShapeConfig, HFLConfig, INPUT_SHAPES
+
+from repro.configs.zamba2_7b import CONFIG as _zamba2
+from repro.configs.olmo_1b import CONFIG as _olmo
+from repro.configs.granite_34b import CONFIG as _granite
+from repro.configs.deepseek_v2_236b import CONFIG as _deepseek
+from repro.configs.h2o_danube3_4b import CONFIG as _danube
+from repro.configs.musicgen_medium import CONFIG as _musicgen
+from repro.configs.mamba2_780m import CONFIG as _mamba2
+from repro.configs.dbrx_132b import CONFIG as _dbrx
+from repro.configs.starcoder2_3b import CONFIG as _starcoder2
+from repro.configs.llava_next_34b import CONFIG as _llava
+
+ARCHS = {
+    c.name: c
+    for c in (
+        _zamba2, _olmo, _granite, _deepseek, _danube,
+        _musicgen, _mamba2, _dbrx, _starcoder2, _llava,
+    )
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; choose from {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in INPUT_SHAPES:
+        raise KeyError(f"unknown shape {name!r}; choose from {sorted(INPUT_SHAPES)}")
+    return INPUT_SHAPES[name]

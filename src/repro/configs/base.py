@@ -1,0 +1,188 @@
+"""Config schema for the repro framework.
+
+Every assigned architecture is expressed as a ``ModelConfig``; input shapes as
+``ShapeConfig``. Configs are plain frozen dataclasses so they hash/compare and
+can be embedded in jit static args.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (transformer / SSM / MoE / hybrid)."""
+
+    name: str
+    arch_type: str  # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int  # query heads; 0 for attention-free archs
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # --- attention flavour ---
+    use_mla: bool = False  # DeepSeek-V2 multi-head latent attention
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_rope_head_dim: int = 64
+    qk_nope_head_dim: int = 128
+    v_head_dim: int = 128
+    sliding_window: int = 0  # 0 -> full attention
+    rope_theta: float = 10000.0
+
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0  # per-expert FFN width (fine-grained MoE)
+    num_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_aux_loss_coef: float = 0.01
+
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_ngroups: int = 1
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256
+
+    # --- hybrid (zamba2-style shared attention) ---
+    attn_every: int = 0  # apply the shared attention block every k layers
+
+    # --- norms / misc ---
+    norm_type: str = "rmsnorm"  # rmsnorm | layernorm | nonparametric_ln
+    act: str = "silu"  # silu | gelu
+    gated_mlp: bool = True  # SwiGLU-style (3 mats) vs classic 2-mat MLP
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+
+    # --- modality frontends (audio/vlm carve-out) ---
+    frontend: str = "none"  # none | audio_frames | vision_patches
+    frontend_tokens: int = 0  # prompt positions fed by the stub frontend
+
+    # --- numerics ---
+    dtype: str = "bfloat16"
+    remat: bool = True
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        if self.num_heads:
+            return self.d_model // self.num_heads
+        return 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.arch_type == "ssm"
+
+    @property
+    def subquadratic(self) -> bool:
+        """Eligible for the long_500k shape (SSM / hybrid / sliding-window)."""
+        if self.arch_type in ("ssm", "hybrid"):
+            return True
+        return self.sliding_window > 0
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant of the same family (<=2 layers, d_model<=512)."""
+        d_model = min(self.d_model, 256)
+        num_heads = min(self.num_heads, 4) if self.num_heads else 0
+        num_kv = max(1, min(self.num_kv_heads, num_heads)) if num_heads else 0
+        kw = dict(
+            name=self.name + "-smoke",
+            num_layers=2,
+            d_model=d_model,
+            num_heads=num_heads,
+            num_kv_heads=num_kv,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            head_dim=(d_model // num_heads) if num_heads else 0,
+        )
+        if self.num_experts:
+            kw.update(
+                num_experts=min(self.num_experts, 4),
+                experts_per_token=min(self.experts_per_token, 2),
+                moe_d_ff=min(self.moe_d_ff, 128),
+                num_shared_experts=min(self.num_shared_experts, 1),
+            )
+        if self.use_mla:
+            kw.update(
+                kv_lora_rank=64,
+                q_lora_rank=64,
+                qk_rope_head_dim=16,
+                qk_nope_head_dim=32,
+                v_head_dim=32,
+            )
+        if self.ssm_state:
+            kw.update(
+                ssm_state=min(self.ssm_state, 16),
+                ssm_headdim=32,
+                ssm_chunk=32,
+            )
+        if self.attn_every:
+            kw.update(attn_every=2)
+        if self.sliding_window:
+            kw.update(sliding_window=64)
+        if self.frontend != "none":
+            kw.update(frontend_tokens=min(self.frontend_tokens, 16))
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# HFL (the paper's technique) config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HFLConfig:
+    """Hierarchical FL + sparse communication parameters (paper §III-IV)."""
+
+    num_clusters: int = 1  # N (pods)
+    mus_per_cluster: int = 4  # data-parallel shards inside a pod
+    period: int = 4  # H: intra-cluster steps between global syncs
+    # sparsification fractions phi: fraction of entries NOT sent (paper's phi)
+    phi_mu_ul: float = 0.99
+    phi_sbs_dl: float = 0.9
+    phi_sbs_ul: float = 0.9
+    phi_mbs_dl: float = 0.9
+    momentum: float = 0.9  # sigma
+    beta_m: float = 0.2  # discounted error accumulation at MBS
+    beta_s: float = 0.5  # discounted error accumulation at SBS
+    sync_mode: str = "sparse"  # dense | sparse (paper) | quantized_sparse (beyond)
+
+    @property
+    def total_mus(self) -> int:
+        return self.num_clusters * self.mus_per_cluster
+
+
+# registry is populated by repro.configs.__init__

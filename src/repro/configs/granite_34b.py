@@ -1,0 +1,18 @@
+"""granite-34b [dense]: 88L d_model=6144 48H (MQA kv=1) d_ff=24576
+vocab=49152 — llama-arch code model (GPT-BigCode lineage). [arXiv:2405.04324]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-34b",
+    arch_type="dense",
+    num_layers=88,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,
+    d_ff=24576,
+    vocab_size=49152,
+    head_dim=128,
+    norm_type="layernorm",
+    act="gelu",
+    gated_mlp=False,
+)

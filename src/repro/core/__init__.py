@@ -1,0 +1,8 @@
+from repro.core.sparsify import dgc_step, omega, topk_mask, threshold_for_phi
+from repro.core.hfl import (
+    HFLState,
+    hfl_init,
+    make_cluster_train_step,
+    make_sync_step,
+    serving_params,
+)

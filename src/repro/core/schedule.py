@@ -1,0 +1,32 @@
+"""H-period orchestration: run intra-cluster steps, sync every H (Alg. 5).
+
+The branch lives at the host level (two separately-jitted programs) rather
+than a ``lax.cond`` inside one program: the sync program has a different
+collective pattern (pod all-gathers) and keeping it separate lets the
+dry-run lower/compile and roofline each phase independently — exactly how
+the paper accounts latency (Γ^period = H intra-cluster iterations + one
+Θ^U + Θ^D consensus).
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Optional
+
+
+def run_hfl(
+    state,
+    train_step: Callable,
+    sync_step: Callable,
+    batches: Iterable,
+    period: int,
+    num_steps: int,
+    on_step: Optional[Callable] = None,
+):
+    """Drive ``num_steps`` iterations, syncing every ``period``."""
+    it = iter(batches)
+    for t in range(num_steps):
+        state, loss = train_step(state, next(it))
+        if (t + 1) % period == 0:
+            state = sync_step(state)
+        if on_step is not None:
+            on_step(t, state, loss)
+    return state

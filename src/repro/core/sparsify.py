@@ -1,0 +1,116 @@
+"""Gradient/model-difference sparsification (paper §IV; DGC, Lin et al. 2018).
+
+``Ω(V, φ)`` keeps the top ``(1-φ)`` fraction of entries by magnitude and
+zeroes the rest. Two selection implementations:
+
+  * ``topk``  -- exact ``lax.top_k`` (reference; used in tests and small runs)
+  * ``hist``  -- histogram threshold estimation (TPU adaptation of DGC's
+                 sampled radix-select; the Pallas kernel in
+                 ``repro.kernels.dgc`` implements the same two-pass scheme)
+
+All functions operate on a single array (a leaf or a flat vector); pytree
+orchestration lives in ``repro.core.hfl``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def keep_count(size: int, phi: float) -> int:
+    """Number of entries transmitted for sparsity parameter φ."""
+    return max(1, int(round((1.0 - phi) * size)))
+
+
+# ---------------------------------------------------------------------------
+# Selection
+# ---------------------------------------------------------------------------
+
+
+def topk_mask(x, k: int):
+    """Boolean mask of the k largest-|x| entries. x any shape."""
+    flat = jnp.abs(x).reshape(-1)
+    _, idx = jax.lax.top_k(flat, k)
+    mask = jnp.zeros(flat.shape, bool).at[idx].set(True)
+    return mask.reshape(x.shape)
+
+
+def threshold_for_phi(x, phi: float, *, bins: int = 64):
+    """Histogram estimate of the |x| threshold keeping ~(1-φ) of entries.
+
+    Linear bins over [0, max|x|]; picks the smallest bin edge whose
+    right-tail count is <= k. Guaranteed to keep AT LEAST k entries
+    (threshold rounds down), mirroring DGC's sampled threshold.
+    """
+    a = jnp.abs(x).reshape(-1).astype(jnp.float32)
+    k = keep_count(a.size, phi)
+    hi = jnp.max(a)
+    edges = jnp.linspace(0.0, 1.0, bins + 1)[:-1]  # bin lower edges (scaled)
+    counts = jnp.sum(a[None, :] >= (edges[:, None] * hi), axis=1)  # tail counts
+    # counts is decreasing in edge; find largest edge with count >= k
+    ok = counts >= k
+    idx = jnp.sum(ok.astype(jnp.int32)) - 1
+    return edges[jnp.maximum(idx, 0)] * hi
+
+
+def threshold_mask(x, phi: float, *, bins: int = 64):
+    th = threshold_for_phi(x, phi, bins=bins)
+    return jnp.abs(x) >= jnp.maximum(th, jnp.finfo(jnp.float32).tiny)
+
+
+def omega(v, phi: float, *, impl: str = "topk"):
+    """Ω(V, φ): sparse form of v. Returns (sparse_v, mask)."""
+    if phi <= 0.0:
+        return v, jnp.ones(v.shape, bool)
+    if impl == "topk":
+        mask = topk_mask(v, keep_count(v.size, phi))
+    elif impl == "hist":
+        mask = threshold_mask(v, phi)
+    elif impl == "pallas":
+        from repro.kernels.dgc import ops as _k
+
+        return _k.omega_pallas(v, phi)
+    else:
+        raise ValueError(impl)
+    return v * mask.astype(v.dtype), mask
+
+
+# ---------------------------------------------------------------------------
+# DGC step (Alg. 4 lines 6-12): momentum correction + error feedback
+# ---------------------------------------------------------------------------
+
+
+def dgc_step(u, v, g, sigma: float, phi: float, *, impl: str = "topk"):
+    """One MU-side sparse-momentum step.
+
+        u <- σ·u + g              (momentum correction)
+        v <- v + u                (error accumulation)
+        ĝ  = v ⊙ mask             (transmitted)
+        u <- u ⊙ ¬mask            (momentum-factor masking)
+        v <- v ⊙ ¬mask
+
+    Returns (ĝ, u', v').
+    """
+    u = sigma * u + g
+    v = v + u
+    ghat, mask = omega(v, phi, impl=impl)
+    keep = (~mask).astype(v.dtype)
+    return ghat, u * keep, v * keep
+
+
+# ---------------------------------------------------------------------------
+# Sparse exchange payloads (top-k values + indices)
+# ---------------------------------------------------------------------------
+
+
+def pack_topk(x, k: int):
+    """-> (values [k], indices [k] int32) of the k largest-|x| entries."""
+    flat = x.reshape(-1)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx.astype(jnp.int32)
+
+
+def unpack_topk(values, indices, size: int, shape=None):
+    out = jnp.zeros((size,), values.dtype).at[indices].add(values)
+    return out.reshape(shape) if shape is not None else out

@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticLM, SyntheticImages
+from repro.data.federated import partition_iid, partition_label_sorted, partition_dirichlet
+from repro.data.pipeline import FederatedBatcher, cluster_batches

@@ -1,0 +1,38 @@
+"""Batch iterators for federated training.
+
+``FederatedBatcher`` replays each MU's fixed shard (the paper: "through the
+iterations MUs train the same subset of the dataset"), yielding per-MU
+minibatches with leading axis K. ``cluster_batches`` reshapes to the
+[N_clusters, local_batch, ...] layout the TPU engine consumes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class FederatedBatcher:
+    def __init__(self, arrays, shards, batch_size: int, seed: int = 0):
+        """arrays: tuple of np arrays sharing axis 0; shards: list of K index sets."""
+        self.arrays = arrays
+        self.shards = shards
+        self.bs = batch_size
+        self.rng = np.random.default_rng(seed)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        outs = []
+        for arr in self.arrays:
+            batch = np.stack(
+                [arr[self.rng.choice(s, self.bs, replace=len(s) < self.bs)] for s in self.shards]
+            )
+            outs.append(batch)  # [K, bs, ...]
+        return tuple(outs) if len(outs) > 1 else outs[0]
+
+
+def cluster_batches(mu_batch: np.ndarray, num_clusters: int):
+    """[K, bs, ...] -> [N, (K/N)*bs, ...]: concat the cluster's MU batches."""
+    K = mu_batch.shape[0]
+    M = K // num_clusters
+    return mu_batch.reshape(num_clusters, M * mu_batch.shape[1], *mu_batch.shape[2:])

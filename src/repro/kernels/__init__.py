@@ -1,0 +1,3 @@
+# Pallas TPU kernels for the paper's compute hot-spot: DGC top-k
+# sparsification (threshold histogram + fused mask/error-update). See
+# repro.kernels.dgc.{kernel,ops,ref}.

@@ -1,0 +1,1 @@
+from repro.kernels.dgc import ops, ref

@@ -1,0 +1,70 @@
+"""Jit'd wrappers around the DGC Pallas kernels.
+
+Handles padding/reshaping of arbitrary flat vectors into the kernels'
+(rows, 1024) tiled layout, threshold selection glue, and the interpret-mode
+switch (interpret=True on CPU; compiled Pallas on real TPUs).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparsify import keep_count
+from repro.kernels.dgc import kernel as K
+from repro.kernels.dgc import ref
+
+_BLOCK_ELEMS = K.BLOCK_ROWS * K.BLOCK_COLS
+
+
+def _to_tiles(x):
+    n = x.size
+    pad = (-n) % _BLOCK_ELEMS
+    xf = jnp.pad(x.reshape(-1).astype(jnp.float32), (0, pad))
+    return xf.reshape(-1, K.BLOCK_COLS), n, pad
+
+
+def _from_tiles(t, n, shape, dtype):
+    return t.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+@partial(jax.jit, static_argnames=("sigma", "phi", "bins", "interpret"))
+def dgc_step_pallas(u, v, g, sigma: float, phi: float, *, bins: int = 64,
+                    interpret: bool = True):
+    """Alg. 4 lines 6-12 via the three Pallas passes. Same contract as
+    ``repro.core.sparsify.dgc_step`` with impl='hist'."""
+    shape, dtype = v.shape, v.dtype
+    ut, n, _ = _to_tiles(u)
+    vt, _, _ = _to_tiles(v)
+    gt, _, _ = _to_tiles(g)
+    u2, v2, bmax = K.update_max(ut, vt, gt, sigma, interpret=interpret)
+    hi = jnp.max(bmax)
+    edges = jnp.linspace(0.0, 1.0, bins + 1)[:-1] * hi
+    edges = jnp.maximum(edges, jnp.finfo(jnp.float32).tiny)
+    counts = K.tail_hist(v2, edges, interpret=interpret)
+    th = ref.pick_threshold(counts, edges, keep_count(n, phi))
+    ghat, u3, v3 = K.apply_mask(u2, v2, th, interpret=interpret)
+    return (
+        _from_tiles(ghat, n, shape, dtype),
+        _from_tiles(u3, n, shape, dtype),
+        _from_tiles(v3, n, shape, dtype),
+    )
+
+
+@partial(jax.jit, static_argnames=("phi", "bins", "interpret"))
+def omega_pallas(x, phi: float, *, bins: int = 64, interpret: bool = True):
+    """Ω(V, φ) via hist-threshold Pallas passes. Returns (sparse, mask)."""
+    shape, dtype = x.shape, x.dtype
+    xt, n, _ = _to_tiles(x)
+    zero = jnp.zeros_like(xt)
+    _, v2, bmax = K.update_max(zero, xt, zero, 0.0, interpret=interpret)
+    hi = jnp.max(bmax)
+    edges = jnp.linspace(0.0, 1.0, bins + 1)[:-1] * hi
+    edges = jnp.maximum(edges, jnp.finfo(jnp.float32).tiny)
+    counts = K.tail_hist(v2, edges, interpret=interpret)
+    th = ref.pick_threshold(counts, edges, keep_count(n, phi))
+    ghat, _, _ = K.apply_mask(zero, v2, th, interpret=interpret)
+    sparse = _from_tiles(ghat, n, shape, dtype)
+    return sparse, (jnp.abs(x) >= th).reshape(shape)

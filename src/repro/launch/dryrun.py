@@ -1,0 +1,208 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture x input shape) pair on the production
+meshes (single-pod 16x16=256 chips and multi-pod 2x16x16=512 chips) with
+ShapeDtypeStruct inputs (no allocation), printing memory_analysis() and
+cost_analysis(), and parsing the compiled HLO for collective bytes — the
+inputs to EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out f.json]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config, get_shape
+from repro.configs.base import HFLConfig
+from repro.launch import steps as st
+from repro.launch.mesh import axis_size, make_production_mesh
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<res>\([^=]*?\)|\S+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def parse_collectives(hlo_text: str):
+    """-> list of {op, bytes, group_size} from a compiled HLO module."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done" in line:
+            continue
+        nbytes = 0
+        for sm in _SHAPE_RE.finditer(m.group("res")):
+            dt = sm.group("dt")
+            if dt not in _DTYPE_BYTES:
+                continue
+            dims = sm.group("dims")
+            n = int(np.prod([int(d) for d in dims.split(",")])) if dims else 1
+            nbytes += n * _DTYPE_BYTES[dt]
+        g = _GROUPS_RE.search(line)
+        group = int(g.group(2)) if g else 0
+        out.append({"op": m.group("op"), "bytes": int(nbytes), "group_size": group})
+    return out
+
+
+def collective_summary(colls):
+    agg = {}
+    for c in colls:
+        k = c["op"]
+        agg.setdefault(k, {"count": 0, "bytes": 0})
+        agg[k]["count"] += 1
+        agg[k]["bytes"] += c["bytes"]
+    return agg
+
+
+def _mem_dict(mem):
+    return {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+    }
+
+
+def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool, verbose=True):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+
+    if shape.kind == "decode" and shape_name == "long_500k" and not cfg.subquadratic:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": "full-attention arch; see DESIGN.md §4"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    data = axis_size(mesh, "data")
+    n_pods = axis_size(mesh, "pod")
+    hfl = HFLConfig(num_clusters=n_pods, mus_per_cluster=data, period=4,
+                    sync_mode="sparse")
+    t0 = time.time()
+    records = {}
+
+    with mesh:
+        if shape.kind == "train":
+            groups = data
+            state_sds, batch_sds, pspecs = st.train_input_specs(cfg, shape, mesh, hfl)
+            bax = ("data",) if (shape.global_batch // hfl.num_clusters) % data == 0 else None
+            step = st.build_train_step(cfg, groups=groups, batch_axes=bax)
+            lowered = jax.jit(step).lower(state_sds, batch_sds)
+            compiled = lowered.compile()
+            records["train_step"] = _record(compiled, mesh)
+            if multi_pod:
+                sync = st.build_sync_step(hfl, mesh, pspecs)
+                lowered_s = jax.jit(sync).lower(state_sds)
+                compiled_s = lowered_s.compile()
+                records["sync_step"] = _record(compiled_s, mesh)
+        elif shape.kind == "prefill":
+            groups = data if shape.global_batch % data == 0 else 1
+            sds = st.serve_input_specs(cfg, shape, mesh, mode="prefill")
+            bax = ("data",) if shape.global_batch % data == 0 else None
+            step = st.build_prefill_step(cfg, groups=groups, batch_axes=bax)
+            out_sh = (None, st.cache_out_shardings(cfg, shape, mesh))
+            lowered = jax.jit(step, out_shardings=out_sh).lower(*sds)
+            compiled = lowered.compile()
+            records["prefill_step"] = _record(compiled, mesh)
+        else:  # decode
+            groups = 1
+            sds = st.serve_input_specs(cfg, shape, mesh, mode="decode")
+            bax = ("data",) if shape.global_batch % data == 0 else None
+            step = st.build_decode_step(cfg, groups=groups, batch_axes=bax)
+            lowered = jax.jit(step).lower(*sds)
+            compiled = lowered.compile()
+            records["serve_step"] = _record(compiled, mesh)
+
+    rec = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "status": "ok", "compile_s": round(time.time() - t0, 1),
+        "programs": records,
+    }
+    if verbose:
+        for name, r in records.items():
+            print(f"  {name}: flops/dev={r['cost']['flops']:.3e} "
+                  f"mem: args={r['memory']['argument_bytes']/2**30:.2f}GiB "
+                  f"temp={r['memory']['temp_bytes']/2**30:.2f}GiB "
+                  f"colls={ {k: v['bytes'] for k, v in r['collectives'].items()} }")
+    return rec
+
+
+def _record(compiled, mesh):
+    from repro.launch.hlo_cost import analyze
+
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    colls = parse_collectives(txt)  # legacy: body-once counts
+    tc = analyze(txt)  # trip-count-aware (see hlo_cost.py)
+    return {
+        "memory": _mem_dict(compiled.memory_analysis()),
+        "cost": {
+            "flops": float(tc["flops"]),
+            "bytes_accessed": float(tc["bytes"]),
+            "xla_flops_body_once": float(cost.get("flops", 0.0)),
+            "xla_bytes_body_once": float(cost.get("bytes accessed", 0.0)),
+        },
+        "collectives": {k: {"bytes": int(v)} for k, v in tc["coll"].items()},
+        "collectives_body_once": collective_summary(colls),
+        "n_devices": int(np.prod([mesh.shape[a] for a in mesh.axis_names])),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    pairs = []
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = sorted(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                pairs.append((a, s, mp))
+
+    results = []
+    for a, s, mp in pairs:
+        tag = f"{a} x {s} x {'2pod/512' if mp else '1pod/256'}"
+        print(f"[dryrun] {tag}", flush=True)
+        try:
+            rec = dryrun_pair(a, s, multi_pod=mp)
+        except Exception as e:
+            traceback.print_exc()
+            rec = {"arch": a, "shape": s, "multi_pod": mp,
+                   "status": "error", "error": f"{type(e).__name__}: {e}"}
+        print(f"[dryrun] {tag} -> {rec['status']}", flush=True)
+        results.append(rec)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    bad = [r for r in results if r["status"] == "error"]
+    print(f"[dryrun] done: {len(results)-len(bad)} ok, {len(bad)} errors")
+    sys.exit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production meshes.
+
+Single pod: 16x16 = 256 chips, axes ("data", "model").
+Multi-pod : 2x16x16 = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis carries the paper's cluster (SBS) structure; cross-pod traffic happens
+only in the every-H sparse sync.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import; smoke tests and
+benches see the real single CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(*, pods: int = 1, data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    axes, shape = [], []
+    if pods > 1:
+        axes.append("pod"); shape.append(pods)
+    axes.append("data"); shape.append(data)
+    axes.append("model"); shape.append(model)
+    return jax.make_mesh(
+        tuple(shape), tuple(axes), axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1

@@ -1,0 +1,107 @@
+"""Sharding policy: param/cache/batch leaves -> PartitionSpec.
+
+FSDP + TP hybrid: for every parameter leaf the largest divisible dim is
+tensor-parallel over "model" and the largest remaining divisible dim is
+fully-sharded over "data" (ZeRO-3-style; XLA re-gathers per layer under the
+scan). Cluster-replicated leaves get the leading "pod" axis prepended by the
+HFL engine, never here. The same policy feeds the fully-manual shard_map of
+the sparse sync, so train and sync layouts agree by construction.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def leaf_spec(shape, *, data: int, model: int, skip_axes=(), data_dims=None) -> P:
+    """Greedy assignment: "model" (TP) on the largest divisible dim; "data"
+    (FSDP) restricted to ``data_dims`` (default: any dim). Restricting data
+    to the *input* dim of weights keeps XLA gathering weights (FSDP) instead
+    of resharding activations every layer (found in §Perf A iteration 3)."""
+    dims = [i for i in range(len(shape)) if i not in skip_axes]
+    order = sorted(dims, key=lambda i: -shape[i])
+    assign = [None] * len(shape)
+    for axis_name, size in (("model", model), ("data", data)):
+        if size <= 1:
+            continue
+        for i in order:
+            if axis_name == "data" and data_dims is not None and i not in data_dims:
+                continue
+            if assign[i] is None and shape[i] % size == 0 and shape[i] >= size:
+                assign[i] = axis_name
+                break
+    return P(*assign) if any(assign) else P()
+
+
+def param_specs(params_shapes, *, data: int, model: int):
+    """Pytree of PartitionSpec for a (single-cluster) param pytree.
+
+    Leaves under a stacked-layer collection ("blocks") never shard axis 0
+    (the scan dynamic-slices it every iteration), and FSDP "data" sharding
+    goes only on the first weight dim (the input/contraction dim), never an
+    output dim — see leaf_spec."""
+
+    def spec(path, l):
+        stacked = any(getattr(k, "key", None) == "blocks" for k in path)
+        skip = (0,) if stacked else ()
+        first = 1 if stacked else 0
+        ddims = (first,) if l.ndim - len(skip) >= 2 else None
+        return leaf_spec(l.shape, data=data, model=model,
+                         skip_axes=skip, data_dims=ddims)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shapes)
+
+
+def with_leading(spec_tree, axis: str):
+    """Prepend a mesh axis (the cluster/pod axis) to every spec."""
+    return jax.tree.map(
+        lambda s: P(axis, *s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def batch_spec(ndim: int, *, pod: bool) -> P:
+    """[N, B, ...] (train, pod axis leading) or [B, ...] (serve)."""
+    if pod:
+        return P("pod", "data", *([None] * (ndim - 2)))
+    return P("data", *([None] * (ndim - 1)))
+
+
+def cache_specs(cache_shapes, *, data: int, model: int, batch_axis: int = 1):
+    """KV/SSM cache: batch dim over "data" when divisible, one more big dim
+    over "model". Cache layouts: k/v [L,B,S,Hkv,D], ckv [L,B,S,r],
+    conv [L,B,W-1,C], state [L,B,H,P,N], slot_pos [B,S], pos [B]."""
+
+    def spec(l):
+        shape = l.shape
+        assign = [None] * len(shape)
+        # find the batch axis: by convention axis `batch_axis` for rank>=3
+        bi = batch_axis if len(shape) > batch_axis else 0
+        if data > 1 and shape[bi] % data == 0 and shape[bi] >= data:
+            assign[bi] = "data"
+        if model > 1:
+            order = sorted(range(len(shape)), key=lambda i: -shape[i])
+            for i in order:
+                if assign[i] is None and shape[i] % model == 0 and shape[i] >= model:
+                    assign[i] = "model"
+                    break
+        return P(*assign) if any(assign) else P()
+
+    return jax.tree.map(spec, cache_shapes)
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def shaped(tree_shapes, shardings):
+    """ShapeDtypeStructs with shardings attached (dry-run inputs)."""
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree_shapes,
+        shardings,
+    )

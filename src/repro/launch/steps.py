@@ -1,0 +1,195 @@
+"""Step builders: LM loss, HFL train step, serve (prefill/decode) steps, and
+ShapeDtypeStruct input builders for every (arch x input-shape x mesh) combo.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_shape
+from repro.configs.base import HFLConfig
+from repro.core.hfl import HFLState, hfl_init, make_cluster_train_step, make_sync_step
+from repro.launch import sharding as shp
+from repro.launch.mesh import axis_size
+from repro.models.common import activation_sharding
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    frontend_dim,
+    init_cache,
+    init_model,
+    prefill,
+)
+from repro.optim import SGDM, warmup_step_decay
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, targets):
+    """Sharding-friendly CE: logsumexp + masked-sum target pick. Avoids
+    materialising the full [B,T,V] log-softmax (which forces a vocab
+    all-gather when V is tensor-parallel)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    tgt = jnp.sum(jnp.where(iota == targets[..., None], lf, 0.0), axis=-1)
+    return lse - tgt
+
+
+def make_loss_fn(cfg, groups: int = 1, batch_axes=None):
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        fe = batch.get("frontend")
+        with activation_sharding(batch_axes):
+            logits, aux = forward(params, tokens, cfg, frontend_embeds=fe, groups=groups)
+        T = tokens.shape[1]
+        loss = cross_entropy(logits[:, -T:-1], tokens[:, 1:]).mean()
+        if cfg.num_experts:
+            loss = loss + cfg.router_aux_loss_coef * aux
+        return loss, aux
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# Train / sync / serve step builders
+# ---------------------------------------------------------------------------
+
+
+def default_optimizer():
+    return SGDM(momentum=0.9, weight_decay=1e-4)
+
+
+def default_schedule():
+    return warmup_step_decay(0.25, warmup_steps=1000, decay_steps=(60000, 90000))
+
+
+def build_train_step(cfg, groups: int = 1, optimizer=None, schedule=None,
+                     batch_axes=None):
+    opt = optimizer or default_optimizer()
+    sched = schedule or default_schedule()
+    return make_cluster_train_step(make_loss_fn(cfg, groups, batch_axes), opt, sched)
+
+
+def build_sync_step(hfl_cfg, mesh, pspecs):
+    return make_sync_step(hfl_cfg, mesh=mesh, param_specs=pspecs)
+
+
+def build_prefill_step(cfg, groups: int = 1, batch_axes=None):
+    def prefill_step(params, tokens, frontend=None):
+        with activation_sharding(batch_axes):
+            return prefill(params, tokens, cfg, frontend_embeds=frontend, groups=groups)
+
+    return prefill_step
+
+
+def build_decode_step(cfg, groups: int = 1, batch_axes=None):
+    def serve_step(params, cache, token):
+        with activation_sharding(batch_axes):
+            return decode_step(params, cache, token, cfg, groups=groups)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStruct; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def model_shapes(cfg):
+    return jax.eval_shape(lambda k: init_model(k, cfg), jax.random.PRNGKey(0))
+
+
+def train_input_specs(cfg, shape, mesh, hfl_cfg, optimizer=None):
+    """-> (state_sds, batch_sds, pspecs) for jit(train_step).lower(...)."""
+    data, model = axis_size(mesh, "data"), axis_size(mesh, "model")
+    has_pod = "pod" in mesh.axis_names
+    pod_axis = "pod" if has_pod else None
+    N = hfl_cfg.num_clusters
+    opt = optimizer or default_optimizer()
+
+    p_shapes = model_shapes(cfg)
+    pspecs = shp.param_specs(p_shapes, data=data, model=model)
+
+    state_shapes = jax.eval_shape(
+        lambda: hfl_init(
+            jax.tree.map(lambda l: jnp.zeros(l.shape, l.dtype), p_shapes), opt, hfl_cfg
+        )
+    )
+
+    def lead(spec_tree):
+        return jax.tree.map(
+            lambda s: P(pod_axis, *s), spec_tree, is_leaf=lambda s: isinstance(s, P)
+        )
+
+    opt_specs = jax.tree.map(
+        lambda l: P(pod_axis, *shp.leaf_spec(l.shape[1:], data=data, model=model))
+        if l.ndim > 0
+        else P(),
+        state_shapes.opt,
+    )
+    state_specs = HFLState(
+        params=lead(pspecs),
+        opt=opt_specs,
+        w_ref=pspecs,
+        eps=lead(pspecs),
+        e=pspecs,
+        step=P(),
+    )
+    state_sds = shp.shaped(state_shapes, shp.to_shardings(state_specs, mesh))
+
+    B, T = shape.global_batch, shape.seq_len
+    local_B = max(B // N, 1)
+    F = cfg.frontend_tokens if cfg.frontend != "none" else 0
+    batch = {"tokens": jax.ShapeDtypeStruct((N, local_B, T - F), jnp.int32)}
+    bspec = {"tokens": P(pod_axis, "data" if local_B % data == 0 else None, None)}
+    if F:
+        batch["frontend"] = jax.ShapeDtypeStruct((N, local_B, F, frontend_dim(cfg)), jnp.float32)
+        bspec["frontend"] = P(pod_axis, "data" if local_B % data == 0 else None, None, None)
+    batch_sds = shp.shaped(batch, shp.to_shardings(bspec, mesh))
+    return state_sds, batch_sds, pspecs
+
+
+def serve_input_specs(cfg, shape, mesh, *, mode: str):
+    """mode='decode': (params_sds, cache_sds, token_sds);
+    mode='prefill': (params_sds, tokens_sds[, frontend_sds])."""
+    data, model = axis_size(mesh, "data"), axis_size(mesh, "model")
+    B, S = shape.global_batch, shape.seq_len
+    p_shapes = model_shapes(cfg)
+    pspecs = shp.param_specs(p_shapes, data=data, model=model)
+    params_sds = shp.shaped(p_shapes, shp.to_shardings(pspecs, mesh))
+
+    if mode == "prefill":
+        F = cfg.frontend_tokens if cfg.frontend != "none" else 0
+        bspec = P("data" if B % data == 0 else None, None)
+        out = [params_sds, jax.ShapeDtypeStruct(
+            (B, S - F), jnp.int32, sharding=NamedSharding(mesh, bspec))]
+        if F:
+            out.append(jax.ShapeDtypeStruct(
+                (B, F, frontend_dim(cfg)), jnp.float32,
+                sharding=NamedSharding(mesh, P(bspec[0], None, None))))
+        return tuple(out)
+
+    cache_shapes = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    cspecs = shp.cache_specs(cache_shapes, data=data, model=model)
+    cache_sds = shp.shaped(cache_shapes, shp.to_shardings(cspecs, mesh))
+    tok_spec = P("data" if B % data == 0 else None, None)
+    token_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                                     sharding=NamedSharding(mesh, tok_spec))
+    return params_sds, cache_sds, token_sds
+
+
+def cache_out_shardings(cfg, shape, mesh):
+    """Explicit shardings for a produced cache (prefill outputs): without
+    them XLA may assemble the full cache replicated per device."""
+    data, model = axis_size(mesh, "data"), axis_size(mesh, "model")
+    cache_shapes = jax.eval_shape(lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+    cspecs = shp.cache_specs(cache_shapes, data=data, model=model)
+    return shp.to_shardings(cspecs, mesh)

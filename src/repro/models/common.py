@@ -1,0 +1,116 @@
+"""Shared NN primitives: norms, RoPE, activations, initializers.
+
+Everything is functional: params are plain dicts of jnp arrays; ``init_*``
+builds them, ``apply``-style functions consume them. Models stack per-layer
+params along a leading axis and scan, so all block families must be
+homogeneous in structure.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Activation sharding hints
+# ---------------------------------------------------------------------------
+# GSPMD's propagation can drop the batch sharding of activations when FSDP
+# param shardings compete for the "data" axis (observed: full-batch f32
+# activations replicated per device). Launch code activates batch-axis
+# constraints at trace time; model code calls ``shard_batch`` at block
+# boundaries.
+
+_BATCH_AXES: tuple | None = None
+
+
+@contextmanager
+def activation_sharding(axes):
+    """axes: mesh axis (or tuple) for the leading batch dim, or None."""
+    global _BATCH_AXES
+    prev = _BATCH_AXES
+    _BATCH_AXES = axes
+    try:
+        yield
+    finally:
+        _BATCH_AXES = prev
+
+
+def shard_batch(x):
+    if _BATCH_AXES is None:
+        return x
+    spec = P(_BATCH_AXES, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def dense_init(key, d_in, d_out, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d_model, dtype):
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg, d):
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm_type == "nonparametric_ln":  # OLMo: LN without affine params
+        return {"_np": jnp.zeros((1,), jnp.float32)}  # placeholder leaf (scan needs homogeneity)
+    raise ValueError(cfg.norm_type)
+
+
+def apply_norm(p, x, cfg):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        rms = jnp.sqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + cfg.norm_eps)
+        return ((xf / rms) * p["scale"]).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) / jnp.sqrt(var + cfg.norm_eps)
+    if cfg.norm_type == "layernorm":
+        y = y * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions, dim, theta):
+    """positions [*P] -> (cos, sin) each [*P, dim//2] in f32."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., T, H, D]; cos/sin [T, D//2] (broadcast over batch/heads)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    # cos/sin come in as [T, D//2]: insert head axis
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1
+    ).astype(x.dtype)

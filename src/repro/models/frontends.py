@@ -1,0 +1,33 @@
+"""Modality frontend stubs ([audio]/[vlm] carve-out).
+
+Per the assignment, the modality frontend (mel-spectrogram + conv feature
+extractor for audio; ViT/SigLIP vision encoder + projector for VLMs) is a
+STUB: ``frontend_embeds_spec`` provides precomputed frame/patch embeddings of
+the right shape, and the language/decoder transformer consumes them through a
+learned linear projector (``params["frontend_proj"]``). This is the single
+sanctioned stub in the system.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import frontend_dim
+
+
+def frontend_embeds_spec(cfg, batch: int, sharding=None):
+    """ShapeDtypeStruct for the precomputed frontend embeddings."""
+    shape = (batch, cfg.frontend_tokens, frontend_dim(cfg))
+    return jax.ShapeDtypeStruct(shape, jnp.float32, sharding=sharding)
+
+
+def fake_frontend_embeds(key, cfg, batch: int):
+    """Deterministic stand-in embeddings for smoke tests / examples.
+
+    Audio: EnCodec-frame-like embeddings; VLM: anyres patch-grid embeddings
+    (llava-next tiles a high-res image into grids; here the token count is
+    the flattened grid already).
+    """
+    return jax.random.normal(
+        key, (batch, cfg.frontend_tokens, frontend_dim(cfg)), jnp.float32
+    ) * 0.02

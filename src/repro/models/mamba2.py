@@ -1,0 +1,229 @@
+"""Mamba2 block (state-space duality, arXiv:2405.21060), TPU-adapted.
+
+The SSD scan is chunked: intra-chunk terms are dense (Q x Q) masked matmuls
+(MXU-friendly), inter-chunk state is carried by a ``lax.scan`` over chunks.
+A step-by-step sequential reference (``ssd_sequential``) backs the tests, and
+``ssd_step`` serves single-token decode with O(1) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, chunk):
+    """x [B,T,H,P]; dt [B,T,H] (>0); A [H] (<0); Bm,Cm [B,T,G,N]; D [H].
+
+    Returns (y [B,T,H,P], final_state [B,H,P,N]).
+
+    Group-aware einsums: B/C stay [.., G, N] and heads are factored as
+    (G, H/G) — never ``jnp.repeat``-ed across heads. The H-fold broadcast of
+    the original formulation materialised [B,T,H,N] tensors whose sharding
+    conflicts generated per-layer all-gathers (found via the §Perf dry-run
+    loop; see EXPERIMENTS.md §Perf A).
+    """
+    Bb, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Hg = H // G
+    Q = min(chunk, T)
+    T_orig = T
+    if T % Q:  # pad with dt=0 steps (decay=1, no state update; rows sliced off)
+        pad = Q - T % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        T = T + pad
+    nc = T // Q
+
+    f32 = jnp.float32
+    xf = x.astype(f32)
+    a = dt.astype(f32) * A.astype(f32)  # [B,T,H] log-decay (negative)
+
+    def to_chunks(z):
+        return jnp.moveaxis(z.reshape(Bb, nc, Q, *z.shape[2:]), 1, 0)
+
+    xs = (to_chunks(xf.reshape(Bb, T, G, Hg, P)),
+          to_chunks(dt.astype(f32).reshape(Bb, T, G, Hg)),
+          to_chunks(a.reshape(Bb, T, G, Hg)),
+          to_chunks(Bm.astype(f32)), to_chunks(Cm.astype(f32)))
+
+    def body(h, inp):
+        xc, dtc, ac, Bc, Cc = inp  # [B,Q,G,Hg,P], [B,Q,G,Hg], ..., [B,Q,G,N]
+        acs = jnp.cumsum(ac, axis=1)  # [B,Q,G,Hg]
+        # --- contribution of the carried state (h [B,G,Hg,P,N]) ---
+        y_inter = jnp.einsum(
+            "bqgn,bqgh,bghpn->bqghp", Cc, jnp.exp(acs), h
+        )
+        # --- intra-chunk (masked quadratic) ---
+        seg = acs[:, :, None] - acs[:, None]  # [B,q,s,G,Hg]
+        mask = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None, None]
+        # mask BEFORE exp: masked entries would overflow exp and poison grads
+        L = jnp.exp(jnp.where(mask, seg, 0.0)) * mask.astype(seg.dtype)
+        CB = jnp.einsum("bqgn,bsgn->bqsg", Cc, Bc)
+        M = CB[..., None] * L * dtc[:, None]  # [B,q,s,G,Hg]
+        y_intra = jnp.einsum("bqsgh,bsghp->bqghp", M, xc)
+        # --- end-of-chunk state ---
+        a_tot = acs[:, -1]  # [B,G,Hg]
+        decay_out = jnp.exp(a_tot[:, None] - acs)  # [B,Q,G,Hg]
+        dBx = jnp.einsum("bsgn,bsgh,bsghp->bghpn", Bc, dtc * decay_out, xc)
+        h_new = jnp.exp(a_tot)[..., None, None] * h + dBx
+        return h_new, y_inter + y_intra
+
+    h0 = jnp.zeros((Bb, G, Hg, P, N), f32)
+    h_final, ys = jax.lax.scan(body, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, T, H, P)[:, :T_orig]
+    y = y + xf[:, :T_orig] * D.astype(f32)[None, None, :, None]
+    return y.astype(x.dtype), h_final.reshape(Bb, H, P, N)
+
+
+def ssd_sequential(x, dt, A, Bm, Cm, D):
+    """Step-by-step oracle for tests. Same signature/returns as ssd_chunked."""
+    Bb, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    f32 = jnp.float32
+    Bh = jnp.repeat(Bm.astype(f32), rep, axis=2)
+    Ch = jnp.repeat(Cm.astype(f32), rep, axis=2)
+
+    def body(h, inp):
+        xt, dtt, Bt, Ct = inp  # [B,H,P], [B,H], [B,H,N], [B,H,N]
+        dA = jnp.exp(dtt * A.astype(f32))  # [B,H]
+        h = h * dA[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhpn", Bt * dtt[..., None], xt
+        )
+        y = jnp.einsum("bhn,bhpn->bhp", Ct, h)
+        return h, y
+
+    xs = (jnp.moveaxis(x.astype(f32), 1, 0), jnp.moveaxis(dt.astype(f32), 1, 0),
+          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0))
+    h0 = jnp.zeros((Bb, H, P, N), f32)
+    h, ys = jax.lax.scan(body, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + x.astype(f32) * D.astype(f32)[None, None, :, None]
+    return y.astype(x.dtype), h
+
+
+def ssd_step(h, xt, dtt, A, Bt, Ct, D):
+    """One decode step. h [B,H,P,N]; xt [B,H,P]; dtt [B,H]; Bt,Ct [B,G,N]."""
+    H = xt.shape[1]
+    G = Bt.shape[1]
+    rep = H // G
+    f32 = jnp.float32
+    Bh = jnp.repeat(Bt.astype(f32), rep, axis=1)
+    Ch = jnp.repeat(Ct.astype(f32), rep, axis=1)
+    dA = jnp.exp(dtt.astype(f32) * A.astype(f32))
+    h = h * dA[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhpn", Bh * dtt.astype(f32)[..., None], xt.astype(f32)
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h) + xt.astype(f32) * D.astype(f32)[None, :, None]
+    return h, y.astype(xt.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (in-proj, depthwise conv, SSD, gated norm, out-proj)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_headdim
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    d_conv = d_inner + 2 * G * N  # conv runs over x, B, C jointly
+    return d_inner, H, G, N, d_conv
+
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    d_inner, H, G, N, d_conv = mamba2_dims(cfg)
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    d_in_proj = 2 * d_inner + 2 * G * N + H  # z, xBC, dt
+    return {
+        "in_proj": dense_init(ks[0], d, d_in_proj, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, d_conv)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((d_conv,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_inner, d, dt, scale=1.0 / np.sqrt(d_inner)),
+    }
+
+
+def _split_proj(proj, cfg):
+    d_inner, H, G, N, _ = mamba2_dims(cfg)
+    z = proj[..., :d_inner]
+    xBC = proj[..., d_inner:2 * d_inner + 2 * G * N]
+    dt_raw = proj[..., -H:]
+    return z, xBC, dt_raw
+
+
+def _gated_norm(y, z, scale, eps):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    rms = jnp.sqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + eps)
+    return (yf / rms * scale).astype(y.dtype)
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv over time. xBC [B,T,Cc]; w [W,Cc]."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def mamba2_forward(p, x, cfg, *, return_state=False):
+    """x [B,T,d_model] -> [B,T,d_model].
+
+    With ``return_state=True`` also returns (final_ssm_state, conv_tail) where
+    conv_tail is the last W-1 *raw* xBC inputs (the decode conv ring buffer).
+    """
+    B, T, _ = x.shape
+    d_inner, H, G, N, _ = mamba2_dims(cfg)
+    P = cfg.ssm_headdim
+    z, xBC_raw, dt_raw = _split_proj(x @ p["in_proj"], cfg)
+    xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :d_inner].reshape(B, T, H, P)
+    Bm = xBC[..., d_inner:d_inner + G * N].reshape(B, T, G, N)
+    Cm = xBC[..., d_inner + G * N:].reshape(B, T, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, state = ssd_chunked(xs, dt, A, Bm, Cm, p["D"], cfg.ssm_chunk)
+    out = _gated_norm(y.reshape(B, T, d_inner), z, p["norm_scale"], cfg.norm_eps) @ p["out_proj"]
+    if return_state:
+        W = cfg.ssm_conv_width
+        pad = max(W - 1 - T, 0)
+        tail = xBC_raw[:, T - (W - 1 - pad):, :]
+        if pad:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, state, tail
+    return out
+
+
+def mamba2_decode(p, x, conv_buf, state, cfg):
+    """One-token step. x [B,1,d]; conv_buf [B,W-1,Cc]; state [B,H,P,N]."""
+    B = x.shape[0]
+    d_inner, H, G, N, d_conv = mamba2_dims(cfg)
+    P = cfg.ssm_headdim
+    z, xBC, dt_raw = _split_proj((x @ p["in_proj"])[:, 0], cfg)  # [B,*]
+    # conv ring: buffer holds the last W-1 raw xBC inputs
+    W = cfg.ssm_conv_width
+    hist = jnp.concatenate([conv_buf, xBC[:, None, :]], axis=1)  # [B,W,Cc]
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, p["conv_w"]) + p["conv_b"])
+    new_buf = hist[:, 1:]
+    xt = conv_out[..., :d_inner].reshape(B, H, P)
+    Bt = conv_out[..., d_inner:d_inner + G * N].reshape(B, G, N)
+    Ct = conv_out[..., d_inner + G * N:].reshape(B, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    state, y = ssd_step(state, xt, dt, A, Bt, Ct, p["D"])
+    out = _gated_norm(y.reshape(B, 1 * d_inner), z, p["norm_scale"], cfg.norm_eps) @ p["out_proj"]
+    return out[:, None, :], new_buf, state

@@ -1,0 +1,29 @@
+"""Dense FFN: SwiGLU (gated, 3 matrices) or classic act-MLP (2 matrices)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import act_fn, dense_init
+
+
+def init_mlp(key, cfg, d_ff=None):
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "w_gate": dense_init(ks[0], d, f, dt),
+        "w_down": dense_init(ks[2], f, d, dt, scale=1.0 / np.sqrt(f)),
+    }
+    if cfg.gated_mlp:
+        p["w_up"] = dense_init(ks[1], d, f, dt)
+    return p
+
+
+def mlp_forward(p, x, cfg):
+    a = act_fn(cfg.act)(x @ p["w_gate"])
+    if cfg.gated_mlp:
+        a = a * (x @ p["w_up"])
+    return a @ p["w_down"]

@@ -1,0 +1,106 @@
+"""Capacity-based token-choice MoE with gather/scatter dispatch.
+
+TPU adaptation: instead of the GShard one-hot [T, E, C] dispatch einsum (whose
+dispatch tensor is infeasible at 160 experts) or a CUDA-style grouped GEMM,
+tokens are routed via a sort -> per-expert gather into a dense [E, C, d]
+activation, two einsums on the MXU, and a scatter-add combine. All shapes are
+static; tokens beyond an expert's capacity are dropped (standard).
+
+Sharding notes: tokens are processed in ``groups`` (= data-parallel shards) by
+vmapping over a leading group axis, which keeps the gathers local to a shard
+under GSPMD. Expert weights are tensor-parallel on the per-expert FFN width
+(f) over the "model" axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import act_fn, dense_init
+
+
+def init_moe(key, cfg):
+    d, E, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32, scale=0.02),
+        "w_gate": (jax.random.normal(ks[1], (E, d, f)) / np.sqrt(d)).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (E, d, f)) / np.sqrt(d)).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (E, f, d)) / np.sqrt(f)).astype(dt),
+    }
+    if cfg.num_shared_experts:
+        from repro.models.mlp import init_mlp
+
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=cfg.moe_d_ff * cfg.num_shared_experts)
+    return p
+
+
+def _capacity(cfg, tokens_per_group: int) -> int:
+    c = int(np.ceil(tokens_per_group * cfg.experts_per_token * cfg.capacity_factor
+                    / cfg.num_experts))
+    return max(8, int(np.ceil(c / 8) * 8))  # pad to VPU sublane multiple
+
+
+def _route_group(x, p, cfg):
+    """One token group. x [T, d] -> (y [T, d], aux_loss scalar)."""
+    T, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = _capacity(cfg, T)
+
+    logits = (x.astype(jnp.float32) @ p["router"])  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)  # [T, K]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- flatten and sort token-slots by expert id ----
+    flat_e = expert_ids.reshape(-1)  # [T*K]
+    flat_t = jnp.repeat(jnp.arange(T), K)  # token index per slot
+    flat_g = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e)
+    e_s, t_s, g_s = flat_e[order], flat_t[order], flat_g[order]
+
+    # position of each slot within its expert segment
+    seg_start = jnp.searchsorted(e_s, jnp.arange(E), side="left")  # [E]
+    pos = jnp.arange(T * K) - seg_start[e_s]
+    keep = pos < C
+    dest = jnp.where(keep, e_s * C + pos, E * C)  # E*C = drop bin
+
+    # ---- build [E, C] index/gate tables ----
+    idx = jnp.full((E * C + 1,), T, jnp.int32).at[dest].set(t_s.astype(jnp.int32))
+    gts = jnp.zeros((E * C + 1,), jnp.float32).at[dest].set(g_s)
+    idx, gts = idx[:-1].reshape(E, C), gts[:-1].reshape(E, C)
+
+    # ---- gather -> expert FFN -> scatter-add ----
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)])  # row T = zeros
+    xe = x_pad[idx]  # [E, C, d]
+    h = act_fn(cfg.act)(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, p["w_up"]
+    )
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])  # [E, C, d]
+    ye = ye * gts[..., None].astype(ye.dtype)
+    y = (
+        jnp.zeros((T + 1, d), ye.dtype)
+        .at[idx.reshape(-1)]
+        .add(ye.reshape(E * C, d))[:T]
+    )
+
+    # ---- load-balance auxiliary loss (Switch-style) ----
+    me = probs.mean(axis=0)  # mean router prob per expert
+    ce = jnp.zeros((E,), jnp.float32).at[flat_e].add(1.0) / (T * K)  # token frac
+    aux = E * jnp.sum(me * ce)
+    return y, aux
+
+
+def moe_forward(p, x, cfg, *, groups=1):
+    """x [B, T, d] -> (y, aux_loss). ``groups`` partitions B*T for locality."""
+    B, T, d = x.shape
+    xf = x.reshape(groups, (B * T) // groups, d)
+    yf, aux = jax.vmap(lambda g: _route_group(g, p, cfg))(xf)
+    y = yf.reshape(B, T, d)
+    if cfg.num_shared_experts:
+        from repro.models.mlp import mlp_forward
+
+        y = y + mlp_forward(p["shared"], x, cfg)
+    return y, aux.mean()

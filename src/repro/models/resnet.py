@@ -1,0 +1,102 @@
+"""ResNet-18 (He et al., 2016) in pure JAX — the paper's own CIFAR-10 model.
+
+Used by the FL/HFL accuracy experiments (Table III / Fig. 6 reproduction).
+BatchNorm carries running stats in a separate ``state`` pytree; training uses
+batch stats (and updates the running ones), eval uses running stats — matching
+the paper's training recipe. A ``width`` knob scales channels for CPU-scale
+runs.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout)) * np.sqrt(2.0 / fan_in)
+
+
+def _bn_init(c):
+    return (
+        {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))},
+        {"mean": jnp.zeros((c,)), "var": jnp.ones((c,))},
+    )
+
+
+def _bn_apply(p, s, x, train: bool, momentum=0.9):
+    if train:
+        mu = x.mean(axis=(0, 1, 2))
+        var = x.var(axis=(0, 1, 2))
+        new_s = {
+            "mean": momentum * s["mean"] + (1 - momentum) * mu,
+            "var": momentum * s["var"] + (1 - momentum) * var,
+        }
+    else:
+        mu, var = s["mean"], s["var"]
+        new_s = s
+    y = (x - mu) / jnp.sqrt(var + 1e-5) * p["scale"] + p["bias"]
+    return y, new_s
+
+
+_STAGES = [(64, 1), (128, 2), (256, 2), (512, 2)]  # (channels, first-stride)
+
+
+def init_resnet18(key, num_classes=10, width=1.0):
+    keys = iter(jax.random.split(key, 64))
+    ch = [max(8, int(c * width)) for c, _ in _STAGES]
+    params, state = {}, {}
+    params["conv0"] = _conv_init(next(keys), 3, 3, 3, ch[0])
+    params["bn0"], state["bn0"] = _bn_init(ch[0])
+    cin = ch[0]
+    for si, (c, stride) in enumerate(zip(ch, [s for _, s in _STAGES])):
+        for bi in range(2):
+            pre = f"s{si}b{bi}"
+            st = stride if bi == 0 else 1
+            params[pre + "c1"] = _conv_init(next(keys), 3, 3, cin, c)
+            params[pre + "bn1"], state[pre + "bn1"] = _bn_init(c)
+            params[pre + "c2"] = _conv_init(next(keys), 3, 3, c, c)
+            params[pre + "bn2"], state[pre + "bn2"] = _bn_init(c)
+            if st != 1 or cin != c:
+                params[pre + "proj"] = _conv_init(next(keys), 1, 1, cin, c)
+                params[pre + "bnp"], state[pre + "bnp"] = _bn_init(c)
+            cin = c
+    params["fc_w"] = jax.random.normal(next(keys), (cin, num_classes)) * 0.01
+    params["fc_b"] = jnp.zeros((num_classes,))
+    return params, state
+
+
+def resnet18_forward(params, state, x, train: bool):
+    """x [B,32,32,3] -> (logits [B,C], new_state)."""
+    new_state = {}
+    h = _conv(x, params["conv0"])
+    h, new_state["bn0"] = _bn_apply(params["bn0"], state["bn0"], h, train)
+    h = jax.nn.relu(h)
+    cin = h.shape[-1]
+    for si, (c, stride) in enumerate(_STAGES):
+        for bi in range(2):
+            pre = f"s{si}b{bi}"
+            st = stride if bi == 0 else 1
+            idt = h
+            y = _conv(h, params[pre + "c1"], st)
+            y, new_state[pre + "bn1"] = _bn_apply(params[pre + "bn1"], state[pre + "bn1"], y, train)
+            y = jax.nn.relu(y)
+            y = _conv(y, params[pre + "c2"])
+            y, new_state[pre + "bn2"] = _bn_apply(params[pre + "bn2"], state[pre + "bn2"], y, train)
+            if pre + "proj" in params:
+                idt = _conv(idt, params[pre + "proj"], st)
+                idt, new_state[pre + "bnp"] = _bn_apply(
+                    params[pre + "bnp"], state[pre + "bnp"], idt, train
+                )
+            h = jax.nn.relu(y + idt)
+    h = h.mean(axis=(1, 2))
+    return h @ params["fc_w"] + params["fc_b"], new_state

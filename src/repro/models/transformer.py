@@ -1,0 +1,432 @@
+"""Model assembly: embedding, scan-over-layers stack, LM head, decode.
+
+Supports every assigned architecture family:
+  dense        -- GQA attention + SwiGLU FFN           (olmo, granite, danube,
+                                                        starcoder2, musicgen*,
+                                                        llava*)
+  moe          -- GQA or MLA attention + routed FFN    (dbrx, deepseek-v2)
+  ssm          -- Mamba2 (SSD) mixer, attention-free   (mamba2-780m)
+  hybrid       -- Mamba2 stack + ONE shared attention
+                  block applied every `attn_every`     (zamba2)
+  (*audio/vlm: dense backbone + stub frontend embeddings)
+
+Per-layer params are stacked on a leading axis and applied with ``lax.scan``
+(small HLO, fast multi-device compiles, natural FSDP axis). Hybrid models are
+split into *static segments* (shared-attention site + run of mamba layers) so
+the shared block's KV cache exists only at its ~L/attn_every sites.
+``cfg.remat`` checkpoints the scan bodies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models.common import apply_norm, dense_init, embed_init, init_norm, shard_batch
+from repro.models.mlp import init_mlp, mlp_forward
+from repro.models.moe import init_moe, moe_forward
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _init_attn_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": init_norm(cfg, cfg.d_model), "norm2": init_norm(cfg, cfg.d_model)}
+    p["attn"] = attn.init_mla(k1, cfg) if cfg.use_mla else attn.init_gqa(k1, cfg)
+    p["ffn"] = init_moe(k2, cfg) if cfg.num_experts else init_mlp(k2, cfg)
+    return p
+
+
+def _apply_attn_block(p, x, cfg, groups):
+    h = apply_norm(p["norm1"], x, cfg)
+    a = attn.mla_forward(p["attn"], h, cfg) if cfg.use_mla else attn.gqa_forward(p["attn"], h, cfg)
+    x = x + a
+    h = apply_norm(p["norm2"], x, cfg)
+    if cfg.num_experts:
+        y, aux = moe_forward(p["ffn"], h, cfg, groups=groups)
+    else:
+        y, aux = mlp_forward(p["ffn"], h, cfg), jnp.float32(0)
+    return x + y, aux
+
+
+def _init_mamba_block(key, cfg):
+    return {"norm1": init_norm(cfg, cfg.d_model), "mixer": m2.init_mamba2(key, cfg)}
+
+
+def _apply_shared_block(p, x, cfg):
+    """zamba2-style shared attention+MLP block (one param set, many sites)."""
+    h = apply_norm(p["norm1"], x, cfg)
+    x = x + attn.gqa_forward(p["attn"], h, cfg)
+    h = apply_norm(p["norm2"], x, cfg)
+    return x + mlp_forward(p["ffn"], h, cfg)
+
+
+def _hybrid_flags(cfg):
+    return np.array(
+        [bool(cfg.attn_every) and (i % cfg.attn_every == 0) for i in range(cfg.num_layers)],
+        dtype=np.bool_,
+    )
+
+
+def num_shared_attn_sites(cfg) -> int:
+    return int(_hybrid_flags(cfg).sum())
+
+
+def _segments(cfg):
+    """Static decomposition: [(attn_site_before, start_layer, n_layers), ...]."""
+    flags = _hybrid_flags(cfg)
+    L = cfg.num_layers
+    segs, i = [], 0
+    while i < L:
+        j = i + 1
+        while j < L and not flags[j]:
+            j += 1
+        segs.append((bool(flags[i]), i, j - i))
+        i = j
+    return segs
+
+
+def _tree_slice(tree, start, length):
+    return jax.tree.map(
+        lambda a: jax.lax.slice_in_dim(a, start, start + length, axis=0), tree
+    )
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def frontend_dim(cfg) -> int:
+    return {"audio_frames": 512, "vision_patches": 1152}.get(cfg.frontend, 0)
+
+
+def padded_vocab(cfg) -> int:
+    """Vocab rounded up to a shardable multiple. A non-divisible vocab
+    (e.g. mamba2's 50280 on a 16-way model axis) forces XLA to contract the
+    LM head over model-sharded d_model and all-reduce full f32 logits —
+    13 GiB/device/step on mamba2-780m x train_4k (§Perf A iteration 2).
+    Padded columns are masked to -inf in ``_logits``."""
+    if cfg.vocab_size % 512 == 0 or cfg.vocab_size < 512:
+        return cfg.vocab_size
+    return -(-cfg.vocab_size // 512) * 512
+
+
+def init_model(key, cfg):
+    keys = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    params = {"embed": embed_init(keys[0], padded_vocab(cfg), cfg.d_model, dt)}
+
+    layer_keys = jax.random.split(keys[1], cfg.num_layers)
+    if cfg.arch_type in ("ssm", "hybrid"):
+        params["blocks"] = jax.vmap(lambda k: _init_mamba_block(k, cfg))(layer_keys)
+    else:
+        params["blocks"] = jax.vmap(lambda k: _init_attn_block(k, cfg))(layer_keys)
+    if cfg.arch_type == "hybrid":
+        k1, k2 = jax.random.split(keys[2])
+        params["shared"] = {
+            "norm1": init_norm(cfg, cfg.d_model),
+            "attn": attn.init_gqa(k1, cfg),
+            "norm2": init_norm(cfg, cfg.d_model),
+            "ffn": init_mlp(k2, cfg),
+        }
+    params["final_norm"] = init_norm(cfg, cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[3], cfg.d_model, padded_vocab(cfg), dt, scale=0.02)
+    if cfg.frontend != "none":
+        params["frontend_proj"] = dense_init(keys[4], frontend_dim(cfg), cfg.d_model, dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / logits only)
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, tokens, cfg, frontend_embeds):
+    x = params["embed"][tokens]  # [B, T_text, d]
+    if cfg.frontend != "none":
+        fe = frontend_embeds.astype(x.dtype) @ params["frontend_proj"]
+        x = jnp.concatenate([fe, x], axis=1)
+    return shard_batch(x)
+
+
+def _logits(params, x, cfg):
+    x = apply_norm(params["final_norm"], x, cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    Vp = logits.shape[-1]
+    if Vp != cfg.vocab_size:  # mask the vocab-padding columns
+        iota = jax.lax.broadcasted_iota(jnp.int32, (Vp,), 0)
+        logits = jnp.where(iota < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+def forward(params, tokens, cfg, *, frontend_embeds=None, groups=1):
+    """tokens [B, T_text] -> (logits [B, T, V], aux_loss scalar)."""
+    x = _embed(params, tokens, cfg, frontend_embeds)
+    aux = jnp.float32(0)
+
+    if cfg.arch_type in ("ssm", "hybrid"):
+        shared = params.get("shared")
+
+        def mamba_body(h, layer_p):
+            h = shard_batch(h)
+            hn = apply_norm(layer_p["norm1"], h, cfg)
+            return shard_batch(h + m2.mamba2_forward(layer_p["mixer"], hn, cfg)), None
+
+        body_fn = jax.checkpoint(mamba_body) if cfg.remat else mamba_body
+        shared_fn = lambda v: shard_batch(_apply_shared_block(shared, v, cfg))
+        if cfg.remat and shared is not None:
+            shared_fn = jax.checkpoint(shared_fn)
+        for has_attn, start, ln in _segments(cfg):
+            if has_attn:
+                x = shared_fn(x)
+            x, _ = jax.lax.scan(body_fn, x, _tree_slice(params["blocks"], start, ln))
+    else:
+
+        def body(carry, layer_p):
+            h, a = carry
+            h = shard_batch(h)
+            h, ai = _apply_attn_block(layer_p, h, cfg, groups)
+            return (shard_batch(h), a + ai), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (x, aux), _ = jax.lax.scan(body_fn, (x, aux), params["blocks"])
+        aux = aux / max(cfg.num_layers, 1)
+
+    return _logits(params, x, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# KV / SSM cache
+# ---------------------------------------------------------------------------
+
+
+def cache_len(cfg, seq_len: int) -> int:
+    if cfg.sliding_window:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def init_cache(cfg, batch: int, seq_len: int, dtype=None):
+    """Empty cache sized for a context of ``seq_len`` tokens."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    L = cfg.num_layers
+    c = {"pos": jnp.zeros((batch,), jnp.int32)}
+    if cfg.arch_type in ("ssm", "hybrid"):
+        d_inner, H, G, N, d_conv = m2.mamba2_dims(cfg)
+        W = cfg.ssm_conv_width
+        c["conv"] = jnp.zeros((L, batch, W - 1, d_conv), dt)
+        c["state"] = jnp.zeros((L, batch, H, cfg.ssm_headdim, N), jnp.float32)
+        if cfg.arch_type == "hybrid":
+            S = cache_len(cfg, seq_len)
+            n_attn = num_shared_attn_sites(cfg)
+            D = cfg.resolved_head_dim
+            c["k"] = jnp.zeros((n_attn, batch, S, cfg.num_kv_heads, D), dt)
+            c["v"] = jnp.zeros((n_attn, batch, S, cfg.num_kv_heads, D), dt)
+            c["slot_pos"] = jnp.full((batch, S), -1, jnp.int32)
+    elif cfg.use_mla:
+        S = cache_len(cfg, seq_len)
+        c["ckv"] = jnp.zeros((L, batch, S, cfg.kv_lora_rank), dt)
+        c["krope"] = jnp.zeros((L, batch, S, cfg.qk_rope_head_dim), dt)
+        c["slot_pos"] = jnp.full((batch, S), -1, jnp.int32)
+    else:
+        S = cache_len(cfg, seq_len)
+        D = cfg.resolved_head_dim
+        c["k"] = jnp.zeros((L, batch, S, cfg.num_kv_heads, D), dt)
+        c["v"] = jnp.zeros((L, batch, S, cfg.num_kv_heads, D), dt)
+        c["slot_pos"] = jnp.full((batch, S), -1, jnp.int32)
+    return c
+
+
+def _decode_slot(cfg, pos, S):
+    if cfg.sliding_window:
+        return pos % S
+    return jnp.minimum(pos, S - 1)
+
+
+# ---------------------------------------------------------------------------
+# Decode step (one new token against the cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, cache, token, cfg, *, groups=1):
+    """token [B,1] int32 -> (logits [B,1,V], new_cache)."""
+    B = token.shape[0]
+    pos = cache["pos"]  # [B] absolute position of this token
+    x = params["embed"][token]  # [B,1,d]
+    new_cache = dict(cache)
+
+    if cfg.arch_type in ("ssm", "hybrid"):
+        shared = params.get("shared")
+        if cfg.arch_type == "hybrid":
+            S = cache["k"].shape[2]
+            slot = _decode_slot(cfg, pos, S)
+            slot_pos = cache["slot_pos"].at[jnp.arange(B), slot].set(pos)
+            new_cache["slot_pos"] = slot_pos
+
+        def mamba_body(h, xs):
+            layer_p, conv_buf, state = xs
+            hn = apply_norm(layer_p["norm1"], h, cfg)
+            y, conv_buf, state = m2.mamba2_decode(layer_p["mixer"], hn, conv_buf, state, cfg)
+            return h + y, (conv_buf, state)
+
+        conv_parts, state_parts, k_parts, v_parts = [], [], [], []
+        ai = 0
+        for has_attn, start, ln in _segments(cfg):
+            if has_attn:
+                ck, cv = cache["k"][ai], cache["v"][ai]
+                hn = apply_norm(shared["norm1"], x, cfg)
+                a, ck, cv = attn.gqa_decode(shared["attn"], hn, ck, cv, slot_pos, slot, pos, cfg)
+                x = x + a
+                x = x + mlp_forward(shared["ffn"], apply_norm(shared["norm2"], x, cfg), cfg)
+                k_parts.append(ck)
+                v_parts.append(cv)
+                ai += 1
+            xs = (
+                _tree_slice(params["blocks"], start, ln),
+                jax.lax.slice_in_dim(cache["conv"], start, start + ln, axis=0),
+                jax.lax.slice_in_dim(cache["state"], start, start + ln, axis=0),
+            )
+            x, (conv, state) = jax.lax.scan(mamba_body, x, xs)
+            conv_parts.append(conv)
+            state_parts.append(state)
+
+        new_cache["conv"] = jnp.concatenate(conv_parts, axis=0)
+        new_cache["state"] = jnp.concatenate(state_parts, axis=0)
+        if cfg.arch_type == "hybrid":
+            new_cache["k"] = jnp.stack(k_parts, axis=0)
+            new_cache["v"] = jnp.stack(v_parts, axis=0)
+
+    elif cfg.use_mla:
+        S = cache["ckv"].shape[2]
+        slot = _decode_slot(cfg, pos, S)
+        slot_pos = cache["slot_pos"].at[jnp.arange(B), slot].set(pos)
+        new_cache["slot_pos"] = slot_pos
+
+        def body(h, xs):
+            layer_p, ckv, kr = xs
+            hn = apply_norm(layer_p["norm1"], h, cfg)
+            a, ckv, kr = attn.mla_decode(layer_p["attn"], hn, ckv, kr, slot_pos, slot, pos, cfg)
+            h = h + a
+            hn = apply_norm(layer_p["norm2"], h, cfg)
+            if cfg.num_experts:
+                y, _ = moe_forward(layer_p["ffn"], hn, cfg, groups=groups)
+            else:
+                y = mlp_forward(layer_p["ffn"], hn, cfg)
+            return h + y, (ckv, kr)
+
+        x, (ckv, kr) = jax.lax.scan(body, x, (params["blocks"], cache["ckv"], cache["krope"]))
+        new_cache.update(ckv=ckv, krope=kr)
+
+    else:
+        S = cache["k"].shape[2]
+        slot = _decode_slot(cfg, pos, S)
+        slot_pos = cache["slot_pos"].at[jnp.arange(B), slot].set(pos)
+        new_cache["slot_pos"] = slot_pos
+
+        def body(h, xs):
+            layer_p, ck, cv = xs
+            hn = apply_norm(layer_p["norm1"], h, cfg)
+            a, ck, cv = attn.gqa_decode(layer_p["attn"], hn, ck, cv, slot_pos, slot, pos, cfg)
+            h = h + a
+            hn = apply_norm(layer_p["norm2"], h, cfg)
+            if cfg.num_experts:
+                y, _ = moe_forward(layer_p["ffn"], hn, cfg, groups=groups)
+            else:
+                y = mlp_forward(layer_p["ffn"], hn, cfg)
+            return h + y, (ck, cv)
+
+        x, (ck, cv) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+        new_cache.update(k=ck, v=cv)
+
+    new_cache["pos"] = pos + 1
+    return _logits(params, x, cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full-prompt forward that also fills the cache
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, tokens, cfg, *, frontend_embeds=None, groups=1, max_len=None):
+    """tokens [B,T] -> (logits [B,T,V], cache ready for decode at pos=T).
+
+    ``max_len`` sizes the cache (>= T + expected decode steps); defaults to T.
+    """
+    x = _embed(params, tokens, cfg, frontend_embeds)
+    B, T, _ = x.shape
+    cache = init_cache(cfg, B, max_len or T)
+    S = cache_len(cfg, max_len or T)
+    keep = jnp.arange(max(T - S, 0), T)  # absolute positions retained
+    slots = keep % S if cfg.sliding_window else keep
+
+    if cfg.arch_type in ("ssm", "hybrid"):
+        shared = params.get("shared")
+
+        def mamba_body(h, layer_p):
+            hn = apply_norm(layer_p["norm1"], h, cfg)
+            y, state, tail = m2.mamba2_forward(layer_p["mixer"], hn, cfg, return_state=True)
+            return h + y, (tail, state)
+
+        body_fn = jax.checkpoint(mamba_body) if cfg.remat else mamba_body
+        conv_parts, state_parts = [], []
+        ai = 0
+        for has_attn, start, ln in _segments(cfg):
+            if has_attn:
+                hn = apply_norm(shared["norm1"], x, cfg)
+                kk, vv = attn.gqa_fill_cache(shared["attn"], hn, cfg)
+                cache["k"] = cache["k"].at[ai].set(
+                    jnp.zeros_like(cache["k"][ai]).at[:, slots].set(kk[:, keep])
+                )
+                cache["v"] = cache["v"].at[ai].set(
+                    jnp.zeros_like(cache["v"][ai]).at[:, slots].set(vv[:, keep])
+                )
+                x = _apply_shared_block(shared, x, cfg)
+                ai += 1
+            x, (conv, state) = jax.lax.scan(body_fn, x, _tree_slice(params["blocks"], start, ln))
+            conv_parts.append(conv)
+            state_parts.append(state)
+        cache["conv"] = jnp.concatenate(conv_parts, axis=0)
+        cache["state"] = jnp.concatenate(state_parts, axis=0)
+        if cfg.arch_type == "hybrid":
+            cache["slot_pos"] = cache["slot_pos"].at[:, slots].set(keep[None, :].astype(jnp.int32))
+
+    else:
+
+        def body(h, layer_p):
+            hn = apply_norm(layer_p["norm1"], h, cfg)
+            if cfg.use_mla:
+                a = attn.mla_forward(layer_p["attn"], hn, cfg)
+                ckv, kr = attn.mla_fill_cache(layer_p["attn"], hn, cfg)
+                filled = (ckv[:, keep], kr[:, keep])
+            else:
+                a = attn.gqa_forward(layer_p["attn"], hn, cfg)
+                kk, vv = attn.gqa_fill_cache(layer_p["attn"], hn, cfg)
+                filled = (kk[:, keep], vv[:, keep])
+            h = h + a
+            hn = apply_norm(layer_p["norm2"], h, cfg)
+            if cfg.num_experts:
+                y, _ = moe_forward(layer_p["ffn"], hn, cfg, groups=groups)
+            else:
+                y = mlp_forward(layer_p["ffn"], hn, cfg)
+            return h + y, filled
+
+        x, filled = jax.lax.scan(body, x, params["blocks"])
+        identity_slots = (not cfg.sliding_window) and S == T
+        keys = ("ckv", "krope") if cfg.use_mla else ("k", "v")
+        for kname, val in zip(keys, filled):
+            if identity_slots:  # plain copy; no scatter (keeps GSPMD shardings)
+                cache[kname] = val.astype(cache[kname].dtype)
+            else:
+                cache[kname] = cache[kname].at[:, :, slots].set(val)
+        cache["slot_pos"] = cache["slot_pos"].at[:, slots].set(keep[None, :].astype(jnp.int32))
+
+    cache["pos"] = jnp.full((B,), x.shape[1], jnp.int32)
+    return _logits(params, x, cfg), cache

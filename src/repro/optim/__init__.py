@@ -1,0 +1,2 @@
+from repro.optim.sgd import SGDM, AdamW
+from repro.optim.schedules import warmup_step_decay, constant_lr

@@ -1,0 +1,21 @@
+"""LR schedules. The paper: linear warm-up for 5 epochs, then x0.1 drops at
+epochs 150 and 225 of 300 (Goyal et al. large-batch recipe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def warmup_step_decay(base_lr: float, warmup_steps: int, decay_steps=(), decay_factor=0.1):
+    decay_steps = tuple(decay_steps)
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+        drops = sum((step >= s).astype(jnp.float32) for s in decay_steps)
+        return warm * (decay_factor ** drops)
+
+    return fn

@@ -1,0 +1,85 @@
+"""Optimizers (pure JAX): momentum SGD (paper's choice) and AdamW.
+
+API: ``opt.init(params) -> state``; ``opt.update(grads, state, params, lr)
+-> (new_params, new_state)``. Weight decay skips 1-D leaves (norm scales,
+biases) as in the paper ("we don't apply weight decay to batch normalization
+parameters").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+def _decay_mask(params):
+    return jax.tree.map(lambda p: p.ndim >= 2, params)
+
+
+@dataclass(frozen=True)
+class SGDM:
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    nesterov: bool = False
+
+    def init(self, params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(self, grads, state, params, lr):
+        mask = _decay_mask(params)
+
+        def upd(g, m, p, use_wd):
+            g = g.astype(jnp.float32)
+            if self.weight_decay:
+                g = g + (self.weight_decay * p.astype(jnp.float32) if use_wd else 0.0)
+            m_new = self.momentum * m + g
+            step = (g + self.momentum * m_new) if self.nesterov else m_new
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m_new
+
+        flat = jax.tree.map(upd, grads, state["m"], params, mask)
+        new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m}
+
+
+@dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def init(self, params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params, lr):
+        t = state["t"] + 1
+        mask = _decay_mask(params)
+        c1 = 1.0 - self.b1 ** t.astype(jnp.float32)
+        c2 = 1.0 - self.b2 ** t.astype(jnp.float32)
+
+        def upd(g, m, v, p, use_wd):
+            g = g.astype(jnp.float32)
+            m_new = self.b1 * m + (1 - self.b1) * g
+            v_new = self.b2 * v + (1 - self.b2) * g * g
+            step = (m_new / c1) / (jnp.sqrt(v_new / c2) + self.eps)
+            if self.weight_decay:
+                step = step + (self.weight_decay * p.astype(jnp.float32) if use_wd else 0.0)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m_new, v_new
+
+        flat = jax.tree.map(upd, grads, state["m"], state["v"], params, mask)
+        is_t = lambda t_: isinstance(t_, tuple)
+        return (
+            jax.tree.map(lambda t_: t_[0], flat, is_leaf=is_t),
+            {
+                "m": jax.tree.map(lambda t_: t_[1], flat, is_leaf=is_t),
+                "v": jax.tree.map(lambda t_: t_[2], flat, is_leaf=is_t),
+                "t": t,
+            },
+        )

@@ -1,0 +1,10 @@
+from repro.utils.tree import (
+    global_norm,
+    param_count,
+    param_bytes,
+    tree_add,
+    tree_scale,
+    tree_zeros_like,
+    flatten_to_vector,
+    unflatten_from_vector,
+)

@@ -1,0 +1,53 @@
+"""Pytree utilities used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def param_count(tree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def param_bytes(tree) -> int:
+    return int(sum(np.prod(x.shape) * x.dtype.itemsize for x in jax.tree.leaves(tree)))
+
+
+def flatten_to_vector(tree):
+    """Concatenate all leaves into one flat f32 vector (+ static unflatten aux)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    sizes = [int(np.prod(s)) for s in shapes]
+    vec = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves]) \
+        if leaves else jnp.zeros((0,), jnp.float32)
+    aux = (treedef, shapes, dtypes, sizes)
+    return vec, aux
+
+
+def unflatten_from_vector(vec, aux):
+    treedef, shapes, dtypes, sizes = aux
+    offs = np.cumsum([0] + sizes)
+    leaves = [
+        vec[offs[i]:offs[i + 1]].reshape(shapes[i]).astype(dtypes[i])
+        for i in range(len(sizes))
+    ]
+    return jax.tree.unflatten(treedef, leaves)

@@ -1,0 +1,5 @@
+from repro.wireless.qam import optimal_rate_per_subcarrier, exp_integral_e1
+from repro.wireless.subcarrier import allocate_subcarriers, min_rate
+from repro.wireless.broadcast import broadcast_latency
+from repro.wireless.topology import HCNTopology
+from repro.wireless.latency import fl_latency, hfl_latency, LatencyParams

@@ -1,0 +1,223 @@
+"""HFL engine tests: scalable TPU-style engine (CPU path), faithful
+simulator equivalences, and the shard_map sparse sync on a real multi-device
+mesh (subprocess so the 8-device XLA flag doesn't leak)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import HFLConfig, ModelConfig
+from repro.core.federated import FaithfulHFL
+from repro.core.hfl import hfl_init, make_cluster_train_step, make_sync_step, serving_params
+from repro.launch.steps import make_loss_fn
+from repro.models.transformer import init_model
+from repro.optim import SGDM
+
+
+def _tiny_cfg():
+    return ModelConfig(name="t", arch_type="dense", num_layers=2, d_model=32,
+                       num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=61,
+                       dtype="float32", remat=False)
+
+
+def _quadratic():
+    Q = 48
+    k = jax.random.PRNGKey(0)
+    A = jax.random.normal(k, (Q, Q)) * 0.1 + jnp.eye(Q)
+    target = jax.random.normal(jax.random.PRNGKey(1), (Q,))
+
+    def grad_fn(w, batch):
+        return A.T @ (A @ (w - target)) + 0.01 * batch
+
+    return Q, grad_fn, target
+
+
+@pytest.mark.parametrize("sync_mode", ["dense", "sparse", "quantized_sparse"])
+def test_scalable_engine_trains_and_reaches_consensus(sync_mode):
+    cfg = _tiny_cfg()
+    hfl = HFLConfig(num_clusters=2, mus_per_cluster=2, period=2, sync_mode=sync_mode)
+    opt = SGDM(momentum=0.9)
+    state = hfl_init(init_model(jax.random.PRNGKey(0), cfg), opt, hfl)
+    train = jax.jit(make_cluster_train_step(make_loss_fn(cfg), opt, lambda t: 0.1))
+    sync = jax.jit(make_sync_step(hfl, mesh=None))
+    toks = jnp.tile(jnp.arange(16)[None, None, :] % 61, (2, 4, 1))
+    losses = []
+    for t in range(20):
+        state, loss = train(state, {"tokens": toks})
+        losses.append(float(loss.mean()))
+        if (t + 1) % hfl.period == 0:
+            state = sync(state)
+    assert losses[-1] < 0.5 * losses[0]
+    div = max(jax.tree.leaves(jax.tree.map(
+        lambda p: float(jnp.abs(p[0] - p[1]).max()), state.params)))
+    assert div == 0.0  # clusters agree exactly after sync
+
+
+def test_dense_sync_is_plain_average():
+    cfg = _tiny_cfg()
+    hfl = HFLConfig(num_clusters=2, mus_per_cluster=1, period=1, sync_mode="dense")
+    opt = SGDM()
+    state = hfl_init(init_model(jax.random.PRNGKey(0), cfg), opt, hfl)
+    # perturb cluster 1
+    state = state._replace(params=jax.tree.map(
+        lambda p: p.at[1].add(1.0), state.params))
+    sync = make_sync_step(hfl, mesh=None)
+    out = sync(state)
+    for p0, p in zip(jax.tree.leaves(state.params), jax.tree.leaves(out.params)):
+        expect = (p0[0] + p0[1]) / 2
+        np.testing.assert_allclose(np.asarray(p[0], np.float32),
+                                   np.asarray(expect, np.float32), rtol=1e-3, atol=1e-5)
+
+
+def test_sparse_sync_error_buffers_conserve_drift():
+    """What is not applied to w_ref stays in eps/e — nothing is lost."""
+    cfg = _tiny_cfg()
+    hfl = HFLConfig(num_clusters=2, mus_per_cluster=1, period=1,
+                    sync_mode="sparse", phi_sbs_ul=0.9, phi_mbs_dl=0.9,
+                    beta_m=1.0, beta_s=1.0)  # undiscounted: exact conservation
+    opt = SGDM()
+    state = hfl_init(init_model(jax.random.PRNGKey(0), cfg), opt, hfl)
+    delta = jax.tree.map(lambda p: jax.random.normal(
+        jax.random.PRNGKey(hash(p.shape) % 2**31), p.shape).astype(p.dtype) * 0.1,
+        state.params)
+    state = state._replace(params=jax.tree.map(jnp.add, state.params, delta))
+    out = make_sync_step(hfl, mesh=None)(state)
+    for d, wr0, wr1, eps, e in zip(
+        jax.tree.leaves(delta), jax.tree.leaves(state.w_ref),
+        jax.tree.leaves(out.w_ref), jax.tree.leaves(out.eps), jax.tree.leaves(out.e),
+    ):
+        mean_drift = np.asarray(d, np.float32).mean(axis=0)
+        applied = np.asarray(wr1 - wr0)
+        buffered = np.asarray(eps, np.float32).mean(axis=0) + np.asarray(e)
+        np.testing.assert_allclose(applied + buffered, mean_drift, rtol=1e-4, atol=1e-5)
+
+
+def test_faithful_hfl_phi0_H1_is_vanilla_sgd():
+    Q, grad_fn, _ = _quadratic()
+    hfl0 = HFLConfig(num_clusters=1, mus_per_cluster=2, period=1,
+                     phi_mu_ul=0, phi_sbs_dl=0, phi_sbs_ul=0, phi_mbs_dl=0,
+                     momentum=0.9, beta_m=0, beta_s=0)
+    sim = FaithfulHFL(grad_fn=grad_fn, w0=jnp.zeros(Q), hfl_cfg=hfl0,
+                      lr_schedule=lambda t: 0.05)
+    w = jnp.zeros(Q)
+    for t in range(8):
+        b = jax.random.normal(jax.random.PRNGKey(t), (2, Q))
+        sim.step(b)
+        w = w - 0.05 * jax.vmap(grad_fn, in_axes=(None, 0))(w, b).mean(0)
+    np.testing.assert_allclose(np.asarray(sim.cluster_models[0]), np.asarray(w),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_faithful_hfl_phi0_is_periodic_averaging():
+    Q, grad_fn, _ = _quadratic()
+    hfl1 = HFLConfig(num_clusters=3, mus_per_cluster=1, period=2,
+                     phi_mu_ul=0, phi_sbs_dl=0, phi_sbs_ul=0, phi_mbs_dl=0,
+                     momentum=0.9, beta_m=0, beta_s=0)
+    sim = FaithfulHFL(grad_fn=grad_fn, w0=jnp.zeros(Q), hfl_cfg=hfl1,
+                      lr_schedule=lambda t: 0.05)
+    wn = jnp.zeros((3, Q))
+    for t in range(6):
+        b = jax.random.normal(jax.random.PRNGKey(100 + t), (3, Q))
+        sim.step(b)
+        wn = wn - 0.05 * jax.vmap(grad_fn)(wn, b)
+        if (t + 1) % 2 == 0:
+            wn = jnp.tile(wn.mean(0)[None], (3, 1))
+    np.testing.assert_allclose(np.asarray(sim.cluster_models), np.asarray(wn),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_faithful_hfl_sparse_converges():
+    Q, grad_fn, target = _quadratic()
+    hfl = HFLConfig(num_clusters=3, mus_per_cluster=2, period=4,
+                    phi_mu_ul=0.9, phi_sbs_dl=0.5, phi_sbs_ul=0.5, phi_mbs_dl=0.5,
+                    momentum=0.9, beta_m=0.2, beta_s=0.5)
+    sim = FaithfulHFL(grad_fn=grad_fn, w0=jnp.zeros(Q), hfl_cfg=hfl,
+                      lr_schedule=lambda t: 0.05)
+    d0 = float(jnp.linalg.norm(sim.global_model - target))
+    key = jax.random.PRNGKey(5)
+    for t in range(150):
+        key, sk = jax.random.split(key)
+        sim.step(jax.random.normal(sk, (6, Q)))
+    d1 = float(jnp.linalg.norm(sim.global_model - target))
+    assert d1 < 0.25 * d0
+
+
+_SHARDMAP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.configs.base import HFLConfig, ModelConfig
+    from repro.core.hfl import hfl_init, make_sync_step
+    from repro.launch.sharding import param_specs
+    from repro.models.transformer import init_model
+    from repro.optim import SGDM
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    cfg = ModelConfig(name="t", arch_type="dense", num_layers=2, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      dtype="float32", remat=False)
+    hfl = HFLConfig(num_clusters=2, mus_per_cluster=2, period=2,
+                    sync_mode="sparse", phi_sbs_ul=0.9, phi_mbs_dl=0.9)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    state = hfl_init(params, SGDM(), hfl)
+    # desynchronise the clusters
+    state = state._replace(params=jax.tree.map(lambda p: p.at[1].add(0.1), state.params))
+    pspecs = param_specs(params, data=2, model=2)
+    with mesh:
+        sync = jax.jit(make_sync_step(hfl, mesh=mesh, param_specs=pspecs))
+        out = sync(state)
+    # NOTE: per-shard top-k may select different entries than the mesh-free
+    # reference's per-leaf top-k, so we verify protocol INVARIANTS instead:
+    # 1) consensus: all clusters identical after sync
+    div = max(jax.tree.leaves(jax.tree.map(lambda p: float(jnp.abs(p[0]-p[1]).max()),
+                                           out.params)))
+    assert div == 0.0, div
+    # 2) conservation (first sync, zero error buffers): for every leaf,
+    #    applied-to-ref + residuals == mean cluster drift
+    for p0, wr0, wr1, eps, e in zip(
+        jax.tree.leaves(state.params), jax.tree.leaves(state.w_ref),
+        jax.tree.leaves(out.w_ref), jax.tree.leaves(out.eps),
+        jax.tree.leaves(out.e),
+    ):
+        drift = np.asarray(p0, np.float32).mean(0) - np.asarray(wr0, np.float32)
+        applied = np.asarray(wr1, np.float32) - np.asarray(wr0, np.float32)
+        buffered = np.asarray(eps, np.float32).mean(0) + np.asarray(e, np.float32)
+        np.testing.assert_allclose(applied + buffered, drift, rtol=1e-4, atol=1e-5)
+    # 3) clusters adopted the new reference
+    for p1, wr1 in zip(jax.tree.leaves(out.params), jax.tree.leaves(out.w_ref)):
+        np.testing.assert_allclose(np.asarray(p1[0], np.float32),
+                                   np.asarray(wr1, np.float32), rtol=1e-4, atol=1e-5)
+    print("SHARDMAP_SYNC_OK")
+""")
+
+
+def test_sparse_sync_shardmap_multi_device():
+    """The pod-mesh shard_map sync must equal the mesh-free reference.
+
+    Caveat: per-shard top-k (8 shards here) vs global top-k can select
+    different entries; with leaf-local top-k both paths pick per-leaf, and
+    the tiny leaves here are <= one shard... so we use leaves large enough
+    to validate the collective plumbing and compare against the same
+    per-leaf semantics.
+    """
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SHARDMAP_SCRIPT], env=env,
+                       capture_output=True, text=True, cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert "SHARDMAP_SYNC_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_serving_params_shape():
+    cfg = _tiny_cfg()
+    hfl = HFLConfig(num_clusters=3, mus_per_cluster=1, period=1)
+    state = hfl_init(init_model(jax.random.PRNGKey(0), cfg), SGDM(), hfl)
+    sp = serving_params(state)
+    for leaf, full in zip(jax.tree.leaves(sp), jax.tree.leaves(state.params)):
+        assert leaf.shape == full.shape[1:]

@@ -1,0 +1,52 @@
+"""Sharding policy unit tests."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.sharding import cache_specs, leaf_spec, param_specs
+
+
+def test_leaf_spec_two_big_dims():
+    s = leaf_spec((4096, 8192), data=16, model=16)
+    assert s == P("data", "model")  # model takes the largest
+
+
+def test_leaf_spec_indivisible_skipped():
+    s = leaf_spec((100, 8192), data=16, model=16)
+    assert s == P(None, "model")
+
+
+def test_leaf_spec_small_replicated():
+    assert leaf_spec((8,), data=16, model=16) == P()
+
+
+def test_leaf_spec_skip_axes():
+    s = leaf_spec((16, 1), data=16, model=16, skip_axes=(0,))
+    assert s == P()  # only dim 0 was eligible and it's skipped
+
+
+def test_param_specs_blocks_never_shard_layer_axis():
+    shapes = {
+        "blocks": {"w": jax.ShapeDtypeStruct((16, 64), jnp.float32)},
+        "embed": jax.ShapeDtypeStruct((16, 64), jnp.float32),
+    }
+    specs = param_specs(shapes, data=16, model=16)
+    assert specs["blocks"]["w"][0] is None  # L axis untouched
+    assert "data" in specs["embed"] or "model" in specs["embed"]
+
+
+def test_cache_specs_batch_on_data():
+    shapes = {
+        "k": jax.ShapeDtypeStruct((4, 128, 4096, 8, 128), jnp.bfloat16),
+        "pos": jax.ShapeDtypeStruct((128,), jnp.int32),
+    }
+    specs = cache_specs(shapes, data=16, model=16)
+    assert specs["k"][1] == "data"
+    assert "model" in specs["k"]
+
+
+def test_cache_specs_batch1_replicated():
+    shapes = {"state": jax.ShapeDtypeStruct((48, 1, 48, 64, 128), jnp.float32)}
+    specs = cache_specs(shapes, data=16, model=16)
+    assert specs["state"][1] is None  # batch 1 cannot shard

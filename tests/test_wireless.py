@@ -1,0 +1,111 @@
+"""Wireless substrate tests: E1 accuracy, rate model sanity, Algorithm 2
+optimality vs brute force (Theorem 1), latency composition."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.wireless.broadcast import broadcast_latency
+from repro.wireless.latency import LatencyParams, fl_latency, hfl_latency
+from repro.wireless.qam import exp_integral_e1, optimal_rate_per_subcarrier
+from repro.wireless.subcarrier import allocate_subcarriers, user_rate
+from repro.wireless.topology import HCNTopology
+
+
+def test_e1_known_values():
+    # E1(1) = 0.21938393, E1(0.5) = 0.55977359, E1(2) = 0.04890051
+    np.testing.assert_allclose(exp_integral_e1(np.array([1.0])), [0.21938393], rtol=1e-4)
+    np.testing.assert_allclose(exp_integral_e1(np.array([0.5])), [0.55977359], rtol=1e-4)
+    np.testing.assert_allclose(exp_integral_e1(np.array([2.0])), [0.04890051], rtol=1e-4)
+
+
+_KW = dict(B0=30e3, Pmax=0.2, N0=10 ** (-15.0) / 30e3, alpha=2.8, ber=1e-3)
+
+
+def test_rate_monotonic_in_distance():
+    r = [optimal_rate_per_subcarrier(m=4, d=d, **_KW) for d in (50, 150, 400, 700)]
+    assert all(a > b for a, b in zip(r, r[1:]))
+
+
+def test_rate_decreases_per_subcarrier_with_more_subcarriers():
+    # power is split across sub-carriers -> per-carrier rate drops with m
+    r = [optimal_rate_per_subcarrier(m=m, d=200, **_KW) for m in (1, 2, 8, 32)]
+    assert all(a > b for a, b in zip(r, r[1:]))
+
+
+def test_total_rate_increases_with_subcarriers():
+    r = [user_rate(m, 200, **_KW) for m in (1, 2, 4, 8)]
+    assert all(a < b for a, b in zip(r, r[1:]))
+
+
+def _brute_force_maxmin(distances, M):
+    K = len(distances)
+    best = -1.0
+    for combo in itertools.product(range(1, M - K + 2), repeat=K):
+        if sum(combo) != M:
+            continue
+        rates = [user_rate(m, d, **_KW) for m, d in zip(combo, distances)]
+        best = max(best, min(rates))
+    return best
+
+
+@pytest.mark.parametrize("distances,M", [
+    ([100.0, 300.0], 5),
+    ([80.0, 200.0, 450.0], 6),
+])
+def test_algorithm2_optimal_vs_brute_force(distances, M):
+    """Theorem 1: the greedy allocation is max-min optimal."""
+    _, rates = allocate_subcarriers(distances, M, **_KW)
+    greedy = rates.min()
+    brute = _brute_force_maxmin(distances, M)
+    assert greedy >= brute - 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_allocation_uses_all_subcarriers(seed):
+    rng = np.random.default_rng(seed)
+    d = rng.uniform(50, 700, size=4)
+    m, rates = allocate_subcarriers(d, 17, **_KW)
+    assert m.sum() == 17 and (m >= 1).all() and (rates > 0).all()
+
+
+def test_broadcast_latency_scales_with_payload():
+    d = [100.0, 200.0, 300.0]
+    kw = dict(M=30, B0=30e3, Pmax=6.3, N0=_KW["N0"], alpha=2.8, trials=3)
+    t1 = broadcast_latency(d, 1e6, **kw)
+    t2 = broadcast_latency(d, 4e6, **kw)
+    assert 2.0 < t2 / t1 < 8.0  # roughly linear
+
+
+def test_hfl_beats_fl_latency():
+    topo = HCNTopology(seed=0)
+    pos, cid = topo.drop_users(3)
+    lp = LatencyParams(model_params=1e6)
+    t_fl, _ = fl_latency(topo, pos, lp)
+    t_hfl, _ = hfl_latency(topo, pos, cid, lp, H=4)
+    assert t_hfl < t_fl  # the paper's core latency claim
+
+
+def test_sparsification_reduces_latency():
+    topo = HCNTopology(seed=0)
+    pos, cid = topo.drop_users(3)
+    lp = LatencyParams(model_params=1e6)
+    dense, _ = hfl_latency(topo, pos, cid, lp, H=4)
+    sparse, _ = hfl_latency(topo, pos, cid, lp, H=4, phi_mu_ul=0.99,
+                            phi_sbs_dl=0.9, phi_sbs_ul=0.9, phi_mbs_dl=0.9)
+    assert sparse < 0.3 * dense
+
+
+def test_speedup_grows_with_pathloss():
+    """Paper Fig. 4: speedup improves as alpha increases."""
+    topo = HCNTopology(seed=0)
+    pos, cid = topo.drop_users(3)
+    speedups = []
+    for alpha in (2.2, 3.0):
+        lp = LatencyParams(model_params=1e6, alpha=alpha)
+        t_fl, _ = fl_latency(topo, pos, lp)
+        t_hfl, _ = hfl_latency(topo, pos, cid, lp, H=4)
+        speedups.append(t_fl / t_hfl)
+    assert speedups[1] > speedups[0]
