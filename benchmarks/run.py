@@ -89,6 +89,22 @@ def bench_dgc_kernel():
     return out
 
 
+def bench_fused_sync(omega_impl="topk"):
+    """Flat-buffer whole-model sync vs leaf-wise reference: top-k/collective
+    launches per sync (1 per hop vs 1 per leaf), build + steady-state time,
+    and Ω selection fidelity."""
+    from benchmarks.fused_sync import run
+    return [
+        (f"sync/{tag}",
+         f"topk={m['leaf_topk']}->{m['flat_topk']},"
+         f"scatter={m['leaf_scatter']}->{m['flat_scatter']},"
+         f"build={m['leaf_build_s']:.2f}s->{m['flat_build_s']:.2f}s,"
+         f"steady={m['leaf_ms']:.1f}ms->{m['flat_ms']:.1f}ms,"
+         f"omega_fidelity={m['fidelity_leaf']:.4f}->{m['fidelity_flat']:.4f}")
+        for tag, m in run(omega_impl=omega_impl)
+    ]
+
+
 ALL = {
     "fig3": bench_fig3,
     "fig4": bench_fig4,
@@ -96,6 +112,7 @@ ALL = {
     "table3": bench_table3,
     "roofline": bench_roofline,
     "kernel": bench_dgc_kernel,
+    "sync": bench_fused_sync,
 }
 
 
@@ -103,6 +120,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--omega-impl", default="topk",
+                    choices=["topk", "hist", "pallas"],
+                    help="Ω selection impl for the fused-sync benchmark")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(ALL)
     failures = 0
@@ -110,7 +130,12 @@ def main() -> None:
         fn = ALL[name]
         t0 = time.time()
         try:
-            rows = fn(fast=not args.full) if name == "table3" else fn()
+            if name == "table3":
+                rows = fn(fast=not args.full)
+            elif name == "sync":
+                rows = fn(omega_impl=args.omega_impl)
+            else:
+                rows = fn()
         except Exception as e:  # pragma: no cover
             print(f"{name},ERROR,{type(e).__name__}: {e}")
             failures += 1

@@ -35,32 +35,33 @@ def build(width=0.25, seed=0):
         lp = jax.nn.log_softmax(logits)
         return -jnp.take_along_axis(lp, y[:, None], 1).mean()
 
-    grad_fn = jax.grad(loss)
-
     def acc_fn(w, x, y):
         p = unflatten_from_vector(w, aux)
         logits, _ = resnet18_forward(p, bn_state, x, train=True)
         return float((logits.argmax(-1) == y).mean())
 
-    return w0, grad_fn, acc_fn
+    return w0, loss, acc_fn
 
 
 def run(name, hfl_cfg, steps, batch_per_mu=16, lr=0.05, seed=0):
-    w0, grad_fn, acc_fn = build(seed=seed)
+    w0, loss_fn, acc_fn = build(seed=seed)
     data = SyntheticImages(seed=3)
     xs, ys = data.sample(4096)
     K = hfl_cfg.total_mus
     shards = partition_iid(len(xs), K, np.random.default_rng(1))
-    sim = FaithfulHFL(grad_fn=grad_fn, w0=w0, hfl_cfg=hfl_cfg,
+    sim = FaithfulHFL(loss_fn=loss_fn, w0=w0, hfl_cfg=hfl_cfg,
                       lr_schedule=lambda t: lr)
     rng = np.random.default_rng(2)
     t0 = time.time()
+    final_loss = float("nan")
     for t in range(steps):
         idx = np.stack([rng.choice(s, batch_per_mu) for s in shards])
-        sim.step((jnp.asarray(xs[idx]), jnp.asarray(ys[idx])))
+        m = sim.step((jnp.asarray(xs[idx]), jnp.asarray(ys[idx])))
+        final_loss = m["loss"]  # real mean training loss across MUs
     xt, yt = data.sample(512, np.random.default_rng(9))
     acc = acc_fn(sim.global_model, jnp.asarray(xt), jnp.asarray(yt))
-    print(f"  {name:24s} top-1 = {acc*100:5.1f}%   ({time.time()-t0:.0f}s)")
+    print(f"  {name:24s} top-1 = {acc*100:5.1f}%  final-loss = {final_loss:.3f}"
+          f"   ({time.time()-t0:.0f}s)")
     return acc
 
 

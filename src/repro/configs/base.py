@@ -179,6 +179,14 @@ class HFLConfig:
     beta_m: float = 0.2  # discounted error accumulation at MBS
     beta_s: float = 0.5  # discounted error accumulation at SBS
     sync_mode: str = "sparse"  # dense | sparse (paper) | quantized_sparse (beyond)
+    # Ω selection implementation for the sync payloads:
+    #   topk (exact lax.top_k) | hist (jnp histogram threshold) |
+    #   pallas (kernels/dgc hist passes)
+    omega_impl: str = "topk"
+    # sync buffer layout: "flat" runs the paper's whole-model Ω once per
+    # sync over one contiguous vector (one top-k + one all-gather + one
+    # scatter-add); "leaf" is the legacy per-pytree-leaf reference path.
+    sync_layout: str = "flat"
 
     @property
     def total_mus(self) -> int:

@@ -34,15 +34,25 @@ from repro.core import sparsify as sp
 
 @dataclass
 class FaithfulHFL:
-    """grad_fn(w_vec, batch) -> grad_vec must be jit-traceable."""
+    """Faithful Alg.5 simulator over flat parameter vectors.
 
-    grad_fn: Callable
+    Provide either ``loss_fn(w_vec, batch) -> scalar`` (preferred: gradients
+    come from ``value_and_grad`` and ``step`` reports the real mean training
+    loss) or ``grad_fn(w_vec, batch) -> grad_vec`` (loss is then unknown and
+    reported as NaN). Both must be jit-traceable; ``loss_fn`` wins if both
+    are given.
+    """
+
     w0: jnp.ndarray  # initial flat model [Q]
     hfl_cfg: "HFLConfig"
     lr_schedule: Callable
+    grad_fn: Callable = None
+    loss_fn: Callable = None
     sparsify_impl: str = "topk"
 
     def __post_init__(self):
+        if self.grad_fn is None and self.loss_fn is None:
+            raise ValueError("FaithfulHFL needs loss_fn or grad_fn")
         N, K = self.hfl_cfg.num_clusters, self.hfl_cfg.total_mus
         Q = self.w0.size
         self.state = {
@@ -57,14 +67,23 @@ class FaithfulHFL:
         }
         self._step = jax.jit(partial(_hfl_iteration,
                                      grad_fn=self.grad_fn,
+                                     loss_fn=self.loss_fn,
                                      hfl=self.hfl_cfg,
                                      lr_schedule=self.lr_schedule,
                                      impl=self.sparsify_impl))
 
     def step(self, batches):
-        """batches: pytree with leading axis K (one slice per MU)."""
-        self.state, loss = self._step(self.state, batches)
-        return float(loss)
+        """batches: pytree with leading axis K (one slice per MU).
+
+        Returns a metrics dict with clearly-named entries (an earlier
+        version returned mean|ĝ_n| *labeled* as the loss):
+          * ``loss``          -- mean training loss across MUs (NaN when
+                                 only ``grad_fn`` was provided)
+          * ``sparse_grad_abs`` -- mean |ĝ_n| of the transmitted sparse
+                                 aggregate (a comms-magnitude diagnostic)
+        """
+        self.state, metrics = self._step(self.state, batches)
+        return {k: float(v) for k, v in metrics.items()}
 
     @property
     def global_model(self):
@@ -75,7 +94,7 @@ class FaithfulHFL:
         return self.state["w_tilde_n"]
 
 
-def _hfl_iteration(state, batches, *, grad_fn, hfl, lr_schedule, impl):
+def _hfl_iteration(state, batches, *, grad_fn, loss_fn, hfl, lr_schedule, impl):
     N, M = hfl.num_clusters, hfl.mus_per_cluster
     K = N * M
     Q = state["w_ref"].size
@@ -84,7 +103,12 @@ def _hfl_iteration(state, batches, *, grad_fn, hfl, lr_schedule, impl):
 
     # ---- per-MU gradient + DGC sparsification (Alg.4 l.4-13) ----
     w_for_mu = jnp.repeat(state["w_tilde_n"], M, axis=0)  # [K, Q]
-    grads = jax.vmap(grad_fn)(w_for_mu, batches)  # [K, Q]
+    if loss_fn is not None:
+        losses, grads = jax.vmap(jax.value_and_grad(loss_fn))(w_for_mu, batches)
+        mean_loss = losses.mean()
+    else:
+        grads = jax.vmap(grad_fn)(w_for_mu, batches)  # [K, Q]
+        mean_loss = jnp.full((), jnp.nan, jnp.float32)
 
     def mu_dgc(u, v, g):
         return sp.dgc_step(u, v, g, sigma, hfl.phi_mu_ul, impl=impl)
@@ -144,4 +168,5 @@ def _hfl_iteration(state, batches, *, grad_fn, hfl, lr_schedule, impl):
         "e": e,
         "t": t_new,
     }
-    return new_state, jnp.mean(jnp.abs(ghat_n))
+    metrics = {"loss": mean_loss, "sparse_grad_abs": jnp.mean(jnp.abs(ghat_n))}
+    return new_state, metrics

@@ -11,18 +11,28 @@ Per-cluster models carry a leading ``[N]`` axis sharded over ``"pod"`` (GSPMD
   * ``make_sync_step``: the every-H inter-cluster consensus (Alg. 5 l.22-39).
     - ``dense``    : plain model averaging over the pod axis (the
                      hierarchical-local-SGD baseline the paper builds on).
-    - ``sparse``   : the paper's contribution. Per-shard DGC top-k of the
-                     model difference, (values, indices) all-gather over
-                     "pod" (2k << Q bytes on the slow cross-pod link),
+    - ``sparse``   : the paper's contribution. DGC top-k of the model
+                     difference, (values, indices) all-gather over "pod"
+                     (2k << Q bytes on the slow cross-pod link),
                      scatter-add consensus, discounted error accumulation
                      (β_s at the SBS, β_m at the MBS).
     - ``quantized_sparse``: beyond-paper — sparse + bf16 values + int32 idx.
 
-The sparse sync runs inside a fully-manual ``jax.shard_map``; because the
+Two sparse *layouts* (``HFLConfig.sync_layout``):
+
+  * ``flat`` (default): the paper-exact whole-model Ω. All pytrees are
+    packed into ONE contiguous f32 vector (``repro.utils.flatten``, static
+    leaf offsets), so each sync runs ONE top-k, ONE all-gather and ONE
+    scatter-add regardless of how many leaves the architecture has.
+  * ``leaf``: the legacy per-leaf adaptation (top-k per tensor, one
+    collective per leaf), kept as the reference for equivalence tests.
+
+The sparse sync runs inside a fully-manual ``shard_map``; because the
 (data, model) shards are aligned across pods, each device exchanges only its
 own shard's top-k with its peers in other pods — no intra-pod collectives at
-all. Top-k is per shard per leaf (DGC selects per tensor), a documented
-adaptation of the paper's whole-vector Ω.
+all, and flat-vector positions mean the same model entry on every peer.
+The Ω selection itself is pluggable (``HFLConfig.omega_impl``): exact
+``lax.top_k`` or the DGC histogram-threshold path (jnp or Pallas kernels).
 """
 from __future__ import annotations
 
@@ -34,6 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sparsify as sp
+from repro.utils import flatten as fl
+from repro.utils import jaxcompat
 
 
 class HFLState(NamedTuple):
@@ -99,6 +111,136 @@ def make_cluster_train_step(loss_fn: Callable, optimizer, lr_schedule):
 # ---------------------------------------------------------------------------
 
 
+def _qround(x):
+    """bf16 wire-format round-trip (what the receiver reconstructs)."""
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+# ---- flat layout: the paper's whole-model Ω, one launch per hop -----------
+
+
+def _make_flat_local_sync(hfl_cfg, quantize):
+    """Single-process whole-vector sync (mesh=None): the cluster axis is a
+    leading array axis and the cross-pod exchange is a local mean."""
+    impl = hfl_cfg.omega_impl
+
+    def flat_sync(state: HFLState):
+        N = hfl_cfg.num_clusters
+        wref, ref_spec = fl.pack(state.w_ref)
+        e, _ = fl.pack(state.e)
+        wn, p_spec = fl.pack_stacked(state.params)
+        eps, eps_spec = fl.pack_stacked(state.eps)
+        Q = ref_spec.total
+
+        # --- SBS side: drift + discounted error, whole-vector top-k uplink
+        #     (Alg.5 l.24-27, Ω over V ∈ R^Q) ---
+        s = wn - wref[None, :] + hfl_cfg.beta_s * eps  # [N, Q]
+        sents, new_eps = [], []
+        for n in range(N):  # static unroll; N is small
+            vals, idx = sp.pack_phi(s[n], hfl_cfg.phi_sbs_ul, impl=impl)
+            if quantize:
+                vals = _qround(vals)
+            sent = sp.unpack_topk(vals, idx, Q)
+            sents.append(sent)
+            new_eps.append(s[n] - sent)
+
+        # --- MBS side: consensus + discounted error + top-k downlink ---
+        delta = sum(sents) / N + hfl_cfg.beta_m * e
+        dvals, didx = sp.pack_phi(delta, hfl_cfg.phi_mbs_dl, impl=impl)
+        if quantize:
+            dvals = _qround(dvals)
+        d = sp.unpack_topk(dvals, didx, Q)
+        new_e = delta - d
+        new_wref = wref + d
+
+        # --- clusters adopt the new reference (Alg.5 l.33/43) ---
+        new_wn = jnp.broadcast_to(new_wref[None], (N, Q))
+        return state._replace(
+            params=fl.unpack_stacked(new_wn, p_spec),
+            w_ref=fl.unpack(new_wref, ref_spec),
+            eps=fl.unpack_stacked(jnp.stack(new_eps), eps_spec),
+            e=fl.unpack(new_e, ref_spec),
+        )
+
+    return flat_sync
+
+
+def _flat_shard_sync(params, w_ref, eps, e, *, hfl_cfg, quantize):
+    """shard_map body: whole-LOCAL-vector sync for this device's shards.
+
+    params/eps leaves [C, *loc] (C = clusters hosted per pod, usually 1);
+    w_ref/e leaves [*loc]. Packs the local shards into one flat vector —
+    the layout is a trace-time constant and identical on every pod peer —
+    then runs Alg.5 with ONE top-k per hop, ONE "pod" all-gather and ONE
+    scatter-add for the whole model.
+    """
+    impl = hfl_cfg.omega_impl
+    N = hfl_cfg.num_clusters
+    wref, ref_spec = fl.pack(w_ref)
+    e_v, _ = fl.pack(e)
+    wn, p_spec = fl.pack_stacked(params)  # [C, Qloc]
+    eps_m, eps_spec = fl.pack_stacked(eps)
+    C = wn.shape[0]
+    Q = ref_spec.total
+
+    # --- SBS side (Alg.5 l.24-27): one whole-vector Ω per hosted cluster ---
+    s = wn - wref[None, :] + hfl_cfg.beta_s * eps_m  # [C, Qloc]
+    vals_l, idx_l, eps_rows = [], [], []
+    for c in range(C):  # static; C == N // num_pods, normally 1
+        vals, idx = sp.pack_phi(s[c], hfl_cfg.phi_sbs_ul, impl=impl)
+        if quantize:
+            # quantize BEFORE accounting the residual: eps must buffer the
+            # bf16 quantization error too, since receivers only ever see
+            # the bf16 value (keeps this path consistent with the local
+            # flat/leaf paths and preserves exact drift conservation)
+            vals = _qround(vals)
+        sent = sp.unpack_topk(vals, idx, Q)
+        eps_rows.append(s[c] - sent)
+        vals_l.append(vals)
+        idx_l.append(idx)
+    vals = jnp.stack(vals_l)  # [C, k]
+    idx = jnp.stack(idx_l)
+
+    # --- cross-pod exchange: 2·C·k values per hop instead of C·Q ---
+    if quantize:
+        # lossless now (vals already round-tripped); the barriers pin the
+        # bf16 cast to THIS side of the gather: XLA's algebraic simplifier
+        # otherwise rewrites convert(all_gather(bf16)) into
+        # all_gather(f32), putting f32 back on the wire
+        vals = jax.lax.optimization_barrier(vals.astype(jnp.bfloat16))
+    all_vals = jax.lax.all_gather(vals, "pod")  # [npod, C, k]
+    if quantize:
+        all_vals = jax.lax.optimization_barrier(all_vals)
+    all_idx = jax.lax.all_gather(idx, "pod")
+    delta = (
+        jnp.zeros((Q,), jnp.float32)
+        .at[all_idx.reshape(-1)]
+        .add(all_vals.reshape(-1).astype(jnp.float32))
+        / N
+    )
+
+    # --- MBS side: discounted error + whole-vector top-k downlink ---
+    delta = delta + hfl_cfg.beta_m * e_v
+    dvals, didx = sp.pack_phi(delta, hfl_cfg.phi_mbs_dl, impl=impl)
+    if quantize:
+        dvals = _qround(dvals)
+    d = sp.unpack_topk(dvals, didx, Q)
+    new_e = delta - d
+    new_wref = wref + d
+
+    # --- clusters adopt the new reference ---
+    new_wn = jnp.broadcast_to(new_wref[None], (C, Q))
+    return (
+        fl.unpack_stacked(new_wn, p_spec),
+        fl.unpack(new_wref, ref_spec),
+        fl.unpack_stacked(jnp.stack(eps_rows), eps_spec),
+        fl.unpack(new_e, ref_spec),
+    )
+
+
+# ---- leaf layout: legacy per-tensor Ω, kept as the reference path ---------
+
+
 def _leaf_sync_sparse(wn, wref, eps, e, *, hfl_cfg, axis, quantize):
     """Local-shard sync for ONE leaf. wn/eps [1, *loc]; wref/e [*loc]."""
     N = hfl_cfg.num_clusters
@@ -113,14 +255,13 @@ def _leaf_sync_sparse(wn, wref, eps, e, *, hfl_cfg, axis, quantize):
     s = (wn0 - wref_f) + hfl_cfg.beta_s * eps_f
     k_ul = sp.keep_count(size, hfl_cfg.phi_sbs_ul)
     vals, idx = sp.pack_topk(s, k_ul)
+    if quantize:
+        vals = _qround(vals)  # residual must buffer the bf16 error too
     sent = sp.unpack_topk(vals, idx, size)
     new_eps = s - sent
 
     # --- cross-pod exchange: 2k values per hop instead of Q ---
     if quantize:
-        # barriers pin the bf16 cast to THIS side of the gather: XLA's
-        # algebraic simplifier otherwise rewrites convert(all_gather(bf16))
-        # into all_gather(f32), putting f32 back on the wire
         vals = jax.lax.optimization_barrier(vals.astype(jnp.bfloat16))
     if axis is not None:
         all_vals = jax.lax.all_gather(vals, axis)  # [N, k]
@@ -141,7 +282,7 @@ def _leaf_sync_sparse(wn, wref, eps, e, *, hfl_cfg, axis, quantize):
     k_dl = sp.keep_count(size, hfl_cfg.phi_mbs_dl)
     dvals, didx = sp.pack_topk(delta, k_dl)
     if quantize:
-        dvals = dvals.astype(jnp.bfloat16).astype(jnp.float32)
+        dvals = _qround(dvals)
     d = sp.unpack_topk(dvals, didx, size)
     new_e = delta - d
     new_wref = wref_f + d
@@ -156,7 +297,56 @@ def _leaf_sync_sparse(wn, wref, eps, e, *, hfl_cfg, axis, quantize):
     )
 
 
-def make_sync_step(hfl_cfg, mesh=None, param_specs=None):
+def _make_leaf_local_sync(hfl_cfg, quantize):
+    """Single-process per-leaf sync (mesh=None): legacy reference path."""
+
+    def local_sync(state: HFLState):
+        def leaf(wn, wref, eps, e):
+            N = hfl_cfg.num_clusters
+            shape = wref.shape
+            size = int(np.prod(shape)) if shape else 1
+            wref_f = wref.astype(jnp.float32).reshape(-1)
+            outs_eps, sents = [], []
+            for n in range(N):  # static unroll; N is small
+                s = (wn[n].astype(jnp.float32).reshape(-1) - wref_f) \
+                    + hfl_cfg.beta_s * eps[n].reshape(-1)
+                k_ul = sp.keep_count(size, hfl_cfg.phi_sbs_ul)
+                vals, idx = sp.pack_topk(s, k_ul)
+                if quantize:
+                    vals = _qround(vals)
+                sent = sp.unpack_topk(vals, idx, size)
+                outs_eps.append(s - sent)
+                sents.append(sent)
+            delta = sum(sents) / N + hfl_cfg.beta_m * e.reshape(-1)
+            k_dl = sp.keep_count(size, hfl_cfg.phi_mbs_dl)
+            dvals, didx = sp.pack_topk(delta, k_dl)
+            if quantize:
+                dvals = _qround(dvals)
+            d = sp.unpack_topk(dvals, didx, size)
+            new_e = delta - d
+            new_wref = wref_f + d
+            new_wn = jnp.broadcast_to(new_wref[None], (N, size))
+            return (
+                new_wn.reshape((N,) + shape).astype(wn.dtype),
+                new_wref.reshape(shape).astype(wref.dtype),
+                jnp.stack(outs_eps).reshape((N,) + shape).astype(eps.dtype),
+                new_e.reshape(shape).astype(e.dtype),
+            )
+
+        outs = jax.tree.map(
+            leaf, state.params, state.w_ref, state.eps, state.e,
+        )
+        is_t = lambda t: isinstance(t, tuple)
+        pick = lambda i: jax.tree.map(lambda t: t[i], outs, is_leaf=is_t)
+        return state._replace(params=pick(0), w_ref=pick(1), eps=pick(2), e=pick(3))
+
+    return local_sync
+
+
+# ---- builder --------------------------------------------------------------
+
+
+def make_sync_step(hfl_cfg, mesh=None, param_specs=None, *, layout=None):
     """Build the every-H consensus step.
 
     ``param_specs``: pytree of PartitionSpec (without the leading cluster
@@ -164,72 +354,45 @@ def make_sync_step(hfl_cfg, mesh=None, param_specs=None):
     with a "pod" axis. ``mesh=None`` -> single-process (tests/CPU); the
     cluster axis is then a plain leading axis and the exchange is a
     concatenation instead of an all-gather.
+
+    ``layout`` overrides ``hfl_cfg.sync_layout`` ("flat" whole-model Ω —
+    the default — or the legacy "leaf" reference path).
     """
     mode = hfl_cfg.sync_mode
     if mode == "dense":
 
         def dense_sync(state: HFLState):
             w_mean = jax.tree.map(lambda p: jnp.mean(p.astype(jnp.float32), axis=0), state.params)
-            N = hfl_cfg.num_clusters
             new_params = jax.tree.map(
                 lambda m, p: jnp.broadcast_to(m[None].astype(p.dtype), p.shape),
                 w_mean,
                 state.params,
             )
-            return state._replace(params=new_params, w_ref=w_mean)
+            # cast back to the buffer dtype chosen at hfl_init: writing the
+            # f32 mean verbatim would flip a bf16 w_ref to f32 after the
+            # first sync and retrace every jitted step each period
+            new_wref = jax.tree.map(
+                lambda m, r: m.astype(r.dtype), w_mean, state.w_ref
+            )
+            return state._replace(params=new_params, w_ref=new_wref)
 
         return dense_sync
 
     quantize = mode == "quantized_sparse"
     if mode not in ("sparse", "quantized_sparse"):
         raise ValueError(mode)
+    layout = layout or getattr(hfl_cfg, "sync_layout", "flat")
+    if layout not in ("flat", "leaf"):
+        raise ValueError(layout)
 
     has_pod = mesh is not None and "pod" in mesh.axis_names
 
     if not has_pod:
-        # Single-pod / CPU path: emulate the cluster axis locally. Each leaf
-        # still follows Alg.5 exactly; the "exchange" is a local sum.
-        def local_sync(state: HFLState):
-            def leaf(wn, wref, eps, e):
-                N = hfl_cfg.num_clusters
-                shape = wref.shape
-                size = int(np.prod(shape)) if shape else 1
-                wref_f = wref.astype(jnp.float32).reshape(-1)
-                outs_eps, sents = [], []
-                for n in range(N):  # static unroll; N is small
-                    s = (wn[n].astype(jnp.float32).reshape(-1) - wref_f) \
-                        + hfl_cfg.beta_s * eps[n].reshape(-1)
-                    k_ul = sp.keep_count(size, hfl_cfg.phi_sbs_ul)
-                    vals, idx = sp.pack_topk(s, k_ul)
-                    if quantize:
-                        vals = vals.astype(jnp.bfloat16).astype(jnp.float32)
-                    sent = sp.unpack_topk(vals, idx, size)
-                    outs_eps.append(s - sent)
-                    sents.append(sent)
-                delta = sum(sents) / N + hfl_cfg.beta_m * e.reshape(-1)
-                k_dl = sp.keep_count(size, hfl_cfg.phi_mbs_dl)
-                dvals, didx = sp.pack_topk(delta, k_dl)
-                if quantize:
-                    dvals = dvals.astype(jnp.bfloat16).astype(jnp.float32)
-                d = sp.unpack_topk(dvals, didx, size)
-                new_e = delta - d
-                new_wref = wref_f + d
-                new_wn = jnp.broadcast_to(new_wref[None], (N, size))
-                return (
-                    new_wn.reshape((N,) + shape).astype(wn.dtype),
-                    new_wref.reshape(shape).astype(wref.dtype),
-                    jnp.stack(outs_eps).reshape((N,) + shape).astype(eps.dtype),
-                    new_e.reshape(shape).astype(e.dtype),
-                )
-
-            outs = jax.tree.map(
-                leaf, state.params, state.w_ref, state.eps, state.e,
-            )
-            is_t = lambda t: isinstance(t, tuple)
-            pick = lambda i: jax.tree.map(lambda t: t[i], outs, is_leaf=is_t)
-            return state._replace(params=pick(0), w_ref=pick(1), eps=pick(2), e=pick(3))
-
-        return local_sync
+        # Single-pod / CPU path: emulate the cluster axis locally. The
+        # protocol still follows Alg.5 exactly; the "exchange" is a local sum.
+        if layout == "flat":
+            return _make_flat_local_sync(hfl_cfg, quantize)
+        return _make_leaf_local_sync(hfl_cfg, quantize)
 
     # --- multi-pod: fully-manual shard_map, per-shard top-k, pod all-gather ---
     assert param_specs is not None, "sparse sync on a pod mesh needs param_specs"
@@ -249,17 +412,21 @@ def make_sync_step(hfl_cfg, mesh=None, param_specs=None):
     )
     out_specs = in_specs
 
-    def _sync_all(params, w_ref, eps, e):
-        outs = jax.tree.map(
-            partial(_leaf_sync_sparse, hfl_cfg=hfl_cfg, axis="pod", quantize=quantize),
-            params, w_ref, eps, e,
-        )
-        is_t = lambda t: isinstance(t, tuple)
-        pick = lambda i: jax.tree.map(lambda t: t[i], outs, is_leaf=is_t)
-        return pick(0), pick(1), pick(2), pick(3)
+    if layout == "flat":
+        _sync_all = partial(_flat_shard_sync, hfl_cfg=hfl_cfg, quantize=quantize)
+    else:
 
-    sync_sm = jax.shard_map(
-        _sync_all, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        def _sync_all(params, w_ref, eps, e):
+            outs = jax.tree.map(
+                partial(_leaf_sync_sparse, hfl_cfg=hfl_cfg, axis="pod", quantize=quantize),
+                params, w_ref, eps, e,
+            )
+            is_t = lambda t: isinstance(t, tuple)
+            pick = lambda i: jax.tree.map(lambda t: t[i], outs, is_leaf=is_t)
+            return pick(0), pick(1), pick(2), pick(3)
+
+    sync_sm = jaxcompat.shard_map(
+        _sync_all, mesh=mesh, in_specs=in_specs, out_specs=out_specs
     )
 
     def sparse_sync(state: HFLState):

@@ -54,9 +54,25 @@ def threshold_for_phi(x, phi: float, *, bins: int = 64):
     return edges[jnp.maximum(idx, 0)] * hi
 
 
+def mask_at_least_k(x, th, k: int):
+    """Mask of ``|x| >= max(th, tiny)``, padded to honour the ">= k kept"
+    contract when fewer entries survive the floor.
+
+    The tiny floor exists so exact zeros are never "selected" by a zero
+    threshold — but on an all-zero (or fewer-than-k-nonzeros) input it
+    would keep fewer than k entries, silently under-filling downstream
+    fixed-size payloads. Padding with the first positions is semantically
+    exact: the padded entries are (near-)zero, so sending them is a no-op.
+    """
+    a = jnp.abs(x)
+    base = a >= jnp.maximum(th, jnp.finfo(jnp.float32).tiny)
+    first_k = (jnp.arange(a.size).reshape(a.shape) < k)
+    return jnp.where(jnp.sum(base) >= k, base, base | first_k)
+
+
 def threshold_mask(x, phi: float, *, bins: int = 64):
     th = threshold_for_phi(x, phi, bins=bins)
-    return jnp.abs(x) >= jnp.maximum(th, jnp.finfo(jnp.float32).tiny)
+    return mask_at_least_k(x, th, keep_count(x.size, phi))
 
 
 def omega(v, phi: float, *, impl: str = "topk"):
@@ -114,3 +130,51 @@ def pack_topk(x, k: int):
 def unpack_topk(values, indices, size: int, shape=None):
     out = jnp.zeros((size,), values.dtype).at[indices].add(values)
     return out.reshape(shape) if shape is not None else out
+
+
+def compact_mask(x, mask, k: int):
+    """Compact the masked entries of ``x`` into a fixed-size (values [k],
+    indices [k] int32) payload without a top-k.
+
+    One cumsum + two scatters, O(Q): the fixed-size compaction used when
+    selection came from a *threshold* (hist/pallas impls) rather than an
+    exact top-k. If the mask keeps more than k entries the surplus is
+    truncated in index order (the hist threshold guarantees >= k, and the
+    overshoot is at most one bin's worth); if fewer, the spare slots hold
+    (value 0, index 0), which scatter-add treats as a no-op.
+    """
+    flat = x.reshape(-1)
+    m = mask.reshape(-1)
+    pos = jnp.cumsum(m.astype(jnp.int32)) - 1
+    tgt = jnp.where(m & (pos < k), pos, k)  # k == out-of-bounds -> dropped
+    iota = jnp.arange(flat.size, dtype=jnp.int32)
+    idx = jnp.zeros((k,), jnp.int32).at[tgt].set(iota, mode="drop")
+    vals = jnp.zeros((k,), flat.dtype).at[tgt].set(flat, mode="drop")
+    return vals, idx
+
+
+def pack_phi(x, phi: float, *, impl: str = "topk", bins: int = 64):
+    """Fixed-size sparse payload of Ω(x, φ): (values [k], indices [k]).
+
+    The exchange-side counterpart of ``omega``: k = keep_count(Q, φ) is
+    static, so the payload can ride a fixed-shape all-gather. ``impl``:
+
+      * ``topk``   -- exact ``lax.top_k`` (reference)
+      * ``hist``   -- jnp histogram threshold + O(Q) compaction
+      * ``pallas`` -- threshold from the Pallas DGC hist kernels
+                      (``repro.kernels.dgc``) + O(Q) compaction
+    """
+    flat = x.reshape(-1)
+    k = keep_count(flat.size, phi)
+    if impl == "topk":
+        return pack_topk(flat, k)
+    if impl == "hist":
+        mask = threshold_mask(flat, phi, bins=bins)
+    elif impl == "pallas":
+        from repro.kernels.dgc import ops as _k
+
+        th = _k.threshold_pallas(flat, phi, bins=bins)
+        mask = mask_at_least_k(flat, th, k)
+    else:
+        raise ValueError(impl)
+    return compact_mask(flat, mask, k)

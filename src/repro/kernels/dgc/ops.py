@@ -45,6 +45,10 @@ def dgc_step_pallas(u, v, g, sigma: float, phi: float, *, bins: int = 64,
     edges = jnp.maximum(edges, jnp.finfo(jnp.float32).tiny)
     counts = K.tail_hist(v2, edges, interpret=interpret)
     th = ref.pick_threshold(counts, edges, keep_count(n, phi))
+    # All-zero v: the tiny-floored edges collapse to a threshold that keeps
+    # NOTHING. th=0 keeps everything instead (all zeros — semantically a
+    # no-op) and preserves the documented ">= k sent" guarantee.
+    th = jnp.where(hi > 0.0, th, 0.0)
     ghat, u3, v3 = K.apply_mask(u2, v2, th, interpret=interpret)
     return (
         _from_tiles(ghat, n, shape, dtype),
@@ -65,6 +69,24 @@ def omega_pallas(x, phi: float, *, bins: int = 64, interpret: bool = True):
     edges = jnp.maximum(edges, jnp.finfo(jnp.float32).tiny)
     counts = K.tail_hist(v2, edges, interpret=interpret)
     th = ref.pick_threshold(counts, edges, keep_count(n, phi))
+    th = jnp.where(hi > 0.0, th, 0.0)  # all-zero x: keep everything (no-op)
     ghat, _, _ = K.apply_mask(zero, v2, th, interpret=interpret)
     sparse = _from_tiles(ghat, n, shape, dtype)
     return sparse, (jnp.abs(x) >= th).reshape(shape)
+
+
+@partial(jax.jit, static_argnames=("phi", "bins", "interpret"))
+def threshold_pallas(x, phi: float, *, bins: int = 64, interpret: bool = True):
+    """|x| threshold keeping >= keep_count(n, φ) entries, via the Pallas
+    hist passes (max + tail_hist); selection glue for the flat-buffer sync's
+    ``sparsify.pack_phi(impl="pallas")``. Returns a scalar f32 threshold
+    (0.0 on an all-zero input, i.e. keep-everything)."""
+    xt, n, _ = _to_tiles(x)
+    zero = jnp.zeros_like(xt)
+    _, v2, bmax = K.update_max(zero, xt, zero, 0.0, interpret=interpret)
+    hi = jnp.max(bmax)
+    edges = jnp.linspace(0.0, 1.0, bins + 1)[:-1] * hi
+    edges = jnp.maximum(edges, jnp.finfo(jnp.float32).tiny)
+    counts = K.tail_hist(v2, edges, interpret=interpret)
+    th = ref.pick_threshold(counts, edges, keep_count(n, phi))
+    return jnp.where(hi > 0.0, th, 0.0)

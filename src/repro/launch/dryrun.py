@@ -146,8 +146,9 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool, verbose=True):
 
 def _record(compiled, mesh):
     from repro.launch.hlo_cost import analyze
+    from repro.utils.jaxcompat import cost_analysis_dict
 
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     txt = compiled.as_text()
     colls = parse_collectives(txt)  # legacy: body-once counts
     tc = analyze(txt)  # trip-count-aware (see hlo_cost.py)

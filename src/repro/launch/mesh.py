@@ -11,15 +11,13 @@ benches see the real single CPU device).
 """
 from __future__ import annotations
 
-import jax
+from repro.utils import jaxcompat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jaxcompat.make_mesh(shape, axes)
 
 
 def make_host_mesh(*, pods: int = 1, data: int = 1, model: int = 1):
@@ -29,9 +27,7 @@ def make_host_mesh(*, pods: int = 1, data: int = 1, model: int = 1):
         axes.append("pod"); shape.append(pods)
     axes.append("data"); shape.append(data)
     axes.append("model"); shape.append(model)
-    return jax.make_mesh(
-        tuple(shape), tuple(axes), axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jaxcompat.make_mesh(shape, axes)
 
 
 def axis_size(mesh, name: str) -> int:

@@ -42,6 +42,13 @@ def main(argv=None):
     ap.add_argument("--period", type=int, default=4)
     ap.add_argument("--sync", default="sparse",
                     choices=["dense", "sparse", "quantized_sparse"])
+    ap.add_argument("--omega-impl", default="topk",
+                    choices=["topk", "hist", "pallas"],
+                    help="Ω selection implementation for sparse syncs")
+    ap.add_argument("--sync-layout", default="flat", choices=["flat", "leaf"],
+                    help="flat = whole-model Ω (paper-exact, one fused "
+                         "top-k/collective per sync); leaf = legacy per-leaf "
+                         "reference path")
     ap.add_argument("--batch-per-mu", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=0.25)
@@ -54,10 +61,12 @@ def main(argv=None):
         cfg = cfg.reduced()
     hfl = HFLConfig(
         num_clusters=args.clusters, mus_per_cluster=args.mus, period=args.period,
-        sync_mode=args.sync,
+        sync_mode=args.sync, omega_impl=args.omega_impl,
+        sync_layout=args.sync_layout,
     )
     print(f"[train] arch={cfg.name} clusters={hfl.num_clusters} "
-          f"mus/cluster={hfl.mus_per_cluster} H={hfl.period} sync={hfl.sync_mode}")
+          f"mus/cluster={hfl.mus_per_cluster} H={hfl.period} sync={hfl.sync_mode} "
+          f"layout={hfl.sync_layout} omega={hfl.omega_impl}")
 
     params = init_model(jax.random.PRNGKey(0), cfg)
     opt = SGDM(momentum=0.9, weight_decay=1e-4)

@@ -1,3 +1,4 @@
+from repro.utils import flatten, jaxcompat
 from repro.utils.tree import (
     global_norm,
     param_count,

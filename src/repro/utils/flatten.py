@@ -1,0 +1,114 @@
+"""Flat-buffer packing of model pytrees for whole-model Ω (paper §IV).
+
+The paper's sparsifier Ω(V, φ) selects the top ``(1-φ)·Q`` entries of the
+*entire* flattened model difference V ∈ R^Q. Applying it per pytree leaf
+(the engine's historical adaptation) skews selection — small leaves get a
+guaranteed quota while large embedding tables compete only with themselves
+— and costs one top-k + one collective launch per leaf on the sync hot
+path. This module provides the exact contract instead: pack the
+``params`` / ``eps`` / ``e`` / ``w_ref`` pytrees into ONE contiguous f32
+vector with STATIC per-leaf offsets, run the whole-vector consensus once,
+and unpack.
+
+Offsets are plain Python ints derived from the abstract shapes at trace
+time, so packing composes with ``shard_map``: inside a pod-mapped body the
+*local* leaf shards pack into a local flat vector whose layout is a
+compile-time constant. Because the (data, model) sharding of every leaf is
+identical across pods, position ``i`` of the local flat vector refers to
+the same model entry on every pod peer — the (values, indices) exchange
+needs no translation.
+
+``FlatSpec`` round-trips dtypes: ``unpack`` casts each leaf back to its
+original dtype, so bf16 models / error buffers keep their storage dtype
+across a sync (no retrace-inducing drift).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class FlatSpec(NamedTuple):
+    """Static layout of a pytree inside a flat vector.
+
+    For ``pack_stacked`` trees the leading (cluster) axis is *excluded*:
+    ``shapes``/``sizes``/``offsets`` describe one row of the ``[N, Q]``
+    matrix.
+    """
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    sizes: Tuple[int, ...]
+    offsets: Tuple[int, ...]  # static start offset of each leaf
+    total: int  # Q
+
+    def leaf_slice(self, i: int) -> slice:
+        """Static slice of leaf ``i`` inside the flat vector."""
+        return slice(self.offsets[i], self.offsets[i] + self.sizes[i])
+
+
+def _spec(leaves, treedef, drop_leading: int) -> FlatSpec:
+    shapes = tuple(tuple(l.shape[drop_leading:]) for l in leaves)
+    dtypes = tuple(l.dtype for l in leaves)
+    sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
+    offsets = tuple(int(o) for o in np.cumsum((0,) + sizes)[:-1])
+    total = int(sum(sizes))
+    return FlatSpec(treedef, shapes, dtypes, sizes, offsets, total)
+
+
+def spec_of(tree) -> FlatSpec:
+    leaves, treedef = jax.tree.flatten(tree)
+    return _spec(leaves, treedef, drop_leading=0)
+
+
+def pack(tree, *, dtype=jnp.float32):
+    """Pytree -> (flat vector [Q] of ``dtype``, FlatSpec)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    spec = _spec(leaves, treedef, drop_leading=0)
+    if not leaves:
+        return jnp.zeros((0,), dtype), spec
+    vec = jnp.concatenate([l.reshape(-1).astype(dtype) for l in leaves])
+    return vec, spec
+
+
+def unpack(vec, spec: FlatSpec):
+    """Flat vector [Q] -> pytree, casting leaves back to their dtypes."""
+    leaves = [
+        vec[spec.leaf_slice(i)].reshape(spec.shapes[i]).astype(spec.dtypes[i])
+        for i in range(len(spec.sizes))
+    ]
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def pack_stacked(tree, *, dtype=jnp.float32):
+    """Pytree with a shared leading axis N -> ([N, Q] matrix, FlatSpec).
+
+    Used for the per-cluster ``params``/``eps`` trees ([N, ...] leaves);
+    row n is cluster n's flat model, laid out identically to ``pack`` of
+    the axis-free tree (same offsets as ``w_ref``/``e``).
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    spec = _spec(leaves, treedef, drop_leading=1)
+    if not leaves:
+        return jnp.zeros((0, 0), dtype), spec
+    n = leaves[0].shape[0]
+    mat = jnp.concatenate(
+        [l.reshape(n, -1).astype(dtype) for l in leaves], axis=1
+    )
+    return mat, spec
+
+
+def unpack_stacked(mat, spec: FlatSpec):
+    """[N, Q] matrix -> pytree of [N, ...] leaves with original dtypes."""
+    n = mat.shape[0]
+    leaves = [
+        mat[:, spec.leaf_slice(i)]
+        .reshape((n,) + spec.shapes[i])
+        .astype(spec.dtypes[i])
+        for i in range(len(spec.sizes))
+    ]
+    return jax.tree.unflatten(spec.treedef, leaves)

@@ -1,0 +1,62 @@
+"""Shared test configuration: degrade gracefully when ``hypothesis`` is absent.
+
+Three tier-1 modules (test_models, test_sparsify, test_wireless) use
+property-based tests and import ``hypothesis`` at module scope. CI installs
+it via ``requirements-dev.txt``; minimal containers may not have it, and a
+bare ``import hypothesis`` then kills the whole suite at *collection* time.
+
+When the real package is missing we install a stub into ``sys.modules``
+whose ``@given`` replaces the test with a skipped placeholder — the
+example-based tests in the same modules still collect and run.
+"""
+from __future__ import annotations
+
+import sys
+import types
+
+try:
+    import hypothesis  # noqa: F401  (real package available: nothing to do)
+except ModuleNotFoundError:
+    import pytest
+
+    _REASON = "hypothesis not installed (pip install -r requirements-dev.txt)"
+
+    def _given(*_args, **_kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason=_REASON)
+            def _skipped_property_test():
+                pass
+
+            _skipped_property_test.__name__ = fn.__name__
+            _skipped_property_test.__qualname__ = getattr(
+                fn, "__qualname__", fn.__name__
+            )
+            _skipped_property_test.__doc__ = fn.__doc__
+            return _skipped_property_test
+
+        return deco
+
+    def _settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _AnyStrategy:
+        """Accepts any call/attribute chain; never executed (tests skip)."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    _stub = types.ModuleType("hypothesis")
+    _stub.given = _given
+    _stub.settings = _settings
+    _stub.strategies = _AnyStrategy()
+    _stub.HealthCheck = _AnyStrategy()
+    _stub.assume = lambda *a, **k: True
+    _stub.__is_repro_stub__ = True
+    sys.modules["hypothesis"] = _stub
+    sys.modules["hypothesis.strategies"] = _stub.strategies

@@ -158,8 +158,8 @@ _SHARDMAP_SCRIPT = textwrap.dedent("""
     from repro.models.transformer import init_model
     from repro.optim import SGDM
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.utils.jaxcompat import make_mesh
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     cfg = ModelConfig(name="t", arch_type="dense", num_layers=2, d_model=32,
                       num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
                       dtype="float32", remat=False)
