@@ -1,9 +1,13 @@
 """Benchmark harness — one entry per paper table/figure + the roofline
-report. Prints CSV: name,derived-metrics.
+report. Prints CSV: name,derived-metrics. The ``sim`` entry additionally
+writes ``benchmarks/artifacts/BENCH_sim.json`` (virtual wall-clock per
+scenario, launches, bytes synced) so the perf trajectory is machine-
+readable across PRs.
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--only fig3,fig4,...]
 """
 import argparse
+import json
 import os
 import sys
 import time
@@ -105,6 +109,22 @@ def bench_fused_sync(omega_impl="topk"):
     ]
 
 
+def bench_sim():
+    """Event-driven HCN simulator: virtual wall-clock per scenario, train/
+    sync launches, access+fronthaul bytes. Writes BENCH_sim.json."""
+    from benchmarks.sim_wallclock import run
+    from repro.utils.format import format_metrics
+    rows = run()
+    artifact = {tag: {k: v for k, v in m.items()} for tag, m in rows}
+    os.makedirs("benchmarks/artifacts", exist_ok=True)
+    path = "benchmarks/artifacts/BENCH_sim.json"
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=1, default=float)
+    out = [(f"sim/{tag}", format_metrics(m)) for tag, m in rows]
+    out.append(("sim/artifact", path))
+    return out
+
+
 ALL = {
     "fig3": bench_fig3,
     "fig4": bench_fig4,
@@ -113,6 +133,7 @@ ALL = {
     "roofline": bench_roofline,
     "kernel": bench_dgc_kernel,
     "sync": bench_fused_sync,
+    "sim": bench_sim,
 }
 
 

@@ -1,0 +1,90 @@
+"""Simulator wall-clock benchmark: virtual time per scenario.
+
+Runs every trainable scenario of the HCN simulator for a few periods with a
+tiny LM (the *real* jitted train/sync steps) and reports the machine-
+readable perf surface of the subsystem: virtual wall-clock per period,
+kernel launches (train/sync program invocations), and bytes on the access /
+fronthaul links. The ``scale-100k`` sampling scenario rides along as the
+fleet-scale latency distribution.
+
+  PYTHONPATH=src python -m benchmarks.sim_wallclock
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HFLConfig, ModelConfig
+from repro.core.hfl import hfl_init, jit_sync_step, make_cluster_train_step, make_sync_step
+from repro.launch.steps import make_loss_fn
+from repro.models.transformer import init_model
+from repro.optim import SGDM
+from repro.sim.scenarios import (
+    SCENARIOS, apply_hfl_overrides, build_engine, run_scale_sampling,
+)
+from repro.wireless.latency import LatencyParams
+
+TRAIN_SCENARIOS = ("paper-fig3", "stragglers", "mobility", "dropout", "async")
+
+
+def _tiny_cfg():
+    return ModelConfig(name="sim-tiny", arch_type="dense", num_layers=2,
+                       d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                       vocab_size=64, dtype="float32", remat=False)
+
+
+def run(periods: int = 2, seed: int = 0):
+    """-> list of (tag, metrics-dict); deterministic in ``seed``."""
+    cfg = _tiny_cfg()
+    loss_fn = make_loss_fn(cfg)
+    opt = SGDM(momentum=0.9)
+    rows = []
+    for name in TRAIN_SCENARIOS:
+        scn = SCENARIOS[name]
+        hfl = apply_hfl_overrides(
+            scn, HFLConfig(num_clusters=4, mus_per_cluster=3, period=4)
+        )
+        engine = build_engine(scn, hfl, seed=seed)
+        state = hfl_init(init_model(jax.random.PRNGKey(seed), cfg), opt, hfl)
+        train = jax.jit(make_cluster_train_step(loss_fn, opt, lambda t: 0.1))
+        sync = jit_sync_step(make_sync_step(hfl, mesh=None))
+        rng = np.random.default_rng(seed)
+        N, B = hfl.num_clusters, hfl.mus_per_cluster * 2
+
+        def batches():
+            while True:
+                toks = rng.integers(0, cfg.vocab_size, (N, B, 16))
+                yield {"tokens": jnp.asarray(toks)}
+
+        steps = periods * hfl.period
+        _, trace = engine.run(state, train, sync, batches(), steps)
+        m = trace.meta
+        # divide by H-periods, not sync launches: under async each period
+        # produces N per-cluster syncs and sync-count would shrink the
+        # per-period number N-fold
+        rows.append((name, {
+            "wallclock_s": trace.wallclock,
+            "per_period_s": trace.wallclock / periods,
+            "train_launches": m["train_launches"],
+            "sync_launches": m["sync_launches"],
+            "bits_access_total": m["bits_access_total"],
+            "bits_fronthaul_total": m["bits_fronthaul_total"],
+            "t_fl_iter_s": m.get("t_fl_iter_s"),
+            "t_hfl_period_s": m.get("t_hfl_period_s"),
+            "final_loss": trace.losses()[-1][1] if trace.losses() else None,
+        }))
+    stats = run_scale_sampling(SCENARIOS["scale-100k"], lp=LatencyParams())
+    rows.append(("scale-100k", {k: v for k, v in stats.items() if k != "scenario"}))
+    return rows
+
+
+def main():
+    from repro.utils.format import format_metrics
+
+    for tag, m in run():
+        print(f"sim/{tag},{format_metrics(m)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Scenario sweep: one tiny model, every simulator scenario, side by side.
+
+Runs each trainable scenario of the HCN simulator for a few periods with
+the same reduced LM and seed, then prints a comparison table: virtual
+wall-clock, per-period latency, loss reached, and bytes moved — the
+"handle as many scenarios as you can imagine" axis of the ROADMAP in one
+screen. Finishes with the 100k-MU latency-sampling scale-out.
+
+    PYTHONPATH=src python examples/scenario_sweep.py [--periods 3]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import HFLConfig
+from repro.core.hfl import hfl_init, jit_sync_step, make_cluster_train_step, make_sync_step
+from repro.data import SyntheticLM
+from repro.launch.steps import make_loss_fn
+from repro.models.transformer import init_model
+from repro.optim import SGDM, constant_lr
+from repro.sim.scenarios import (
+    SCENARIOS, apply_hfl_overrides, build_engine, run_scale_sampling,
+)
+from repro.wireless.latency import LatencyParams
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--periods", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config("olmo-1b").reduced()
+    loss_fn = make_loss_fn(cfg)
+    opt = SGDM(momentum=0.9)
+    lm = SyntheticLM(cfg.vocab_size, seed=args.seed)
+
+    print(f"{'scenario':<12} {'discipline':<9} {'wallclock':>10} "
+          f"{'s/period':>9} {'loss':>7} {'fronthaul':>10}")
+    for name, scn in SCENARIOS.items():
+        if scn.kind != "train":
+            continue
+        hfl = apply_hfl_overrides(
+            scn, HFLConfig(num_clusters=4, mus_per_cluster=2, period=4)
+        )
+        engine = build_engine(scn, hfl, seed=args.seed)
+        state = hfl_init(init_model(jax.random.PRNGKey(args.seed), cfg), opt, hfl)
+        train = jax.jit(make_cluster_train_step(loss_fn, opt, constant_lr(0.1)))
+        sync = jit_sync_step(make_sync_step(hfl, mesh=None))
+        rng = np.random.default_rng(args.seed)
+        N, B = hfl.num_clusters, hfl.mus_per_cluster * 2
+
+        def batches():
+            while True:
+                toks = lm.sample(N * B, 32, rng)
+                yield {"tokens": jnp.asarray(toks.reshape(N, B, 32))}
+
+        _, trace = engine.run(state, train, sync, batches(),
+                              args.periods * hfl.period)
+        m = trace.meta
+        loss = trace.losses()[-1][1]
+        print(f"{name:<12} {m['discipline']:<9} {trace.wallclock:>9.2f}s "
+              f"{trace.wallclock / args.periods:>8.2f}s "
+              f"{loss:>7.3f} {m['bits_fronthaul_total'] / 8e6:>8.1f}MB")
+
+    stats = run_scale_sampling(SCENARIOS["scale-100k"], lp=LatencyParams())
+    print(f"\nscale-100k: {stats['n_users']} MUs, UL rate "
+          f"p5={stats['rate_p5_bps']/1e6:.2f}Mbps "
+          f"p50={stats['rate_p50_bps']/1e6:.2f}Mbps "
+          f"p95={stats['rate_p95_bps']/1e6:.2f}Mbps; "
+          f"worst-MU UL {stats['t_ul_worst_s']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

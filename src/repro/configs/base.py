@@ -193,4 +193,33 @@ class HFLConfig:
         return self.num_clusters * self.mus_per_cluster
 
 
+# ---------------------------------------------------------------------------
+# Simulation (event-driven HCN scenario engine) config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    """Scenario knobs for the event-driven simulator (``repro.sim``).
+
+    The wireless side (cell geometry, rate model) lives in
+    ``wireless.latency.LatencyParams``; this config holds everything the
+    *fleet* and the *schedule* add on top: per-device compute speed,
+    availability, mobility, and the sync discipline.
+    """
+
+    scenario: str = "paper-fig3"
+    # lockstep (paper) | deadline (straggler drop) | async (own clocks,
+    # staleness-weighted consensus)
+    discipline: str = "lockstep"
+    seed: int = 0
+    base_compute_s: float = 0.05  # mean wall time of one local iteration
+    compute_sigma: float = 0.0  # lognormal sigma of per-MU compute multiplier
+    dropout: float = 0.0  # per-round MU unavailability probability
+    speed_mps: float = 0.0  # random-waypoint speed; 0 = static (paper)
+    deadline_factor: float = 1.5  # deadline = factor * median per-MU round time
+    staleness_exp: float = 1.0  # async weight = (1/N) * (1+staleness)^-exp
+    reuse: int = 1  # frequency-reuse factor for the cluster coloring
+
+
 # registry is populated by repro.configs.__init__

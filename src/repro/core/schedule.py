@@ -6,6 +6,13 @@ collective pattern (pod all-gathers) and keeping it separate lets the
 dry-run lower/compile and roofline each phase independently — exactly how
 the paper accounts latency (Γ^period = H intra-cluster iterations + one
 Θ^U + Θ^D consensus).
+
+``run_hfl`` is now a thin adapter over the event-driven simulation engine
+(``repro.sim.engine.SimEngine``) in null-wireless mode: the same lockstep
+schedule, with virtual time attached. Callers that want the wall-clock /
+scenario machinery (stragglers, mobility, dropout, async) build a
+``SimEngine`` via ``repro.sim.scenarios`` and call ``engine.run`` directly,
+which also returns the trace.
 """
 from __future__ import annotations
 
@@ -21,12 +28,15 @@ def run_hfl(
     num_steps: int,
     on_step: Optional[Callable] = None,
 ):
-    """Drive ``num_steps`` iterations, syncing every ``period``."""
-    it = iter(batches)
-    for t in range(num_steps):
-        state, loss = train_step(state, next(it))
-        if (t + 1) % period == 0:
-            state = sync_step(state)
-        if on_step is not None:
-            on_step(t, state, loss)
+    """Drive ``num_steps`` iterations, syncing every ``period``.
+
+    Call order per step is unchanged from the historical loop: train, then
+    (at period boundaries) sync, then ``on_step(t, state, loss)``.
+    """
+    from repro.sim.engine import SimEngine
+
+    engine = SimEngine(period=period, record=False)
+    state, _trace = engine.run(
+        state, train_step, sync_step, batches, num_steps, on_step=on_step
+    )
     return state

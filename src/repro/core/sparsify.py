@@ -47,7 +47,12 @@ def threshold_for_phi(x, phi: float, *, bins: int = 64):
     k = keep_count(a.size, phi)
     hi = jnp.max(a)
     edges = jnp.linspace(0.0, 1.0, bins + 1)[:-1]  # bin lower edges (scaled)
-    counts = jnp.sum(a[None, :] >= (edges[:, None] * hi), axis=1)  # tail counts
+    # one-pass tail counts: sort once, then #(a >= e) = Q - #(a < e) via a
+    # single searchsorted over all edges. Scatter-free and O(Q log Q),
+    # vs the old O(bins*Q) broadcast-compare that materialised a [bins, Q]
+    # boolean (the Pallas `tail_hist` kernel is the TPU analogue).
+    a_sorted = jnp.sort(a)
+    counts = a.size - jnp.searchsorted(a_sorted, edges * hi, side="left")
     # counts is decreasing in edge; find largest edge with count >= k
     ok = counts >= k
     idx = jnp.sum(ok.astype(jnp.int32)) - 1

@@ -8,6 +8,14 @@ fleet the same script runs the full configs over the production mesh.
 
   PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
       --steps 200 --clusters 4 --period 4 --sync sparse
+
+With ``--scenario`` the run goes through the event-driven HCN simulator
+(``repro.sim``): the same jitted train/sync steps, but driven on a virtual
+wall clock priced by the wireless model, emitting a deterministic
+wall-clock-vs-loss trace (``--trace-out`` to save it as JSON):
+
+  PYTHONPATH=src python -m repro.launch.train --scenario paper-fig3 \
+      --steps 8 --trace-out trace.json
 """
 from __future__ import annotations
 
@@ -22,13 +30,27 @@ import numpy as np
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
 from repro.configs.base import HFLConfig
-from repro.core.hfl import hfl_init, make_cluster_train_step, make_sync_step, serving_params
+from repro.core.hfl import (
+    hfl_init, jit_sync_step, make_cluster_train_step, make_sync_step,
+    serving_params,
+)
 from repro.core.schedule import run_hfl
 from repro.data import SyntheticLM
 from repro.launch.steps import make_loss_fn
 from repro.models.frontends import fake_frontend_embeds
 from repro.models.transformer import forward, init_model
 from repro.optim import SGDM, warmup_step_decay
+
+
+def _jsonable(obj):
+    """numpy scalars -> python floats/ints so traces dump cleanly."""
+    if isinstance(obj, dict):
+        return {k: _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (np.floating, np.integer)):
+        return obj.item()
+    return obj
 
 
 def main(argv=None):
@@ -54,7 +76,31 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=0.25)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log-every", type=int, default=20)
+    ap.add_argument("--scenario", default=None,
+                    help="run through the HCN simulator (repro.sim): "
+                         "paper-fig3 | stragglers | mobility | dropout | "
+                         "async | scale-100k. A scenario may pin HFL "
+                         "settings (paper-fig3 pins the paper's 7-cluster "
+                         "topology, K=4, H=2, φ).")
+    ap.add_argument("--sim-seed", type=int, default=0,
+                    help="fleet/scenario seed (replay is bit-identical)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the wall-clock trace JSON here")
     args = ap.parse_args(argv)
+
+    scenario = None
+    if args.scenario is not None:
+        from repro.sim.scenarios import get_scenario, run_scale_sampling
+        scenario = get_scenario(args.scenario)
+        if scenario.kind == "sampling":
+            from repro.utils.format import format_metrics
+            stats = _jsonable(run_scale_sampling(scenario))
+            print(f"[sim] {args.scenario}: "
+                  + format_metrics(stats, skip=("scenario",)))
+            if args.trace_out:
+                with open(args.trace_out, "w") as f:
+                    json.dump(stats, f, indent=1)
+            return stats, None
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -64,9 +110,13 @@ def main(argv=None):
         sync_mode=args.sync, omega_impl=args.omega_impl,
         sync_layout=args.sync_layout,
     )
+    if scenario is not None:
+        from repro.sim.scenarios import apply_hfl_overrides
+        hfl = apply_hfl_overrides(scenario, hfl)
     print(f"[train] arch={cfg.name} clusters={hfl.num_clusters} "
           f"mus/cluster={hfl.mus_per_cluster} H={hfl.period} sync={hfl.sync_mode} "
-          f"layout={hfl.sync_layout} omega={hfl.omega_impl}")
+          f"layout={hfl.sync_layout} omega={hfl.omega_impl}"
+          + (f" scenario={scenario.name}" if scenario is not None else ""))
 
     params = init_model(jax.random.PRNGKey(0), cfg)
     opt = SGDM(momentum=0.9, weight_decay=1e-4)
@@ -77,7 +127,8 @@ def main(argv=None):
 
     loss_fn = make_loss_fn(cfg)
     train_step = jax.jit(make_cluster_train_step(loss_fn, opt, sched))
-    sync_step = jax.jit(make_sync_step(hfl, mesh=None))
+    # sync consumes-and-replaces the whole state: donate it (peak-mem lever)
+    sync_step = jit_sync_step(make_sync_step(hfl, mesh=None))
 
     lm = SyntheticLM(cfg.vocab_size, seed=1)
     rng = np.random.default_rng(2)
@@ -103,8 +154,29 @@ def main(argv=None):
         if (t + 1) % args.log_every == 0:
             print(f"  step {t+1:5d}  loss {l:.4f}  ({(time.time()-t0)/(t+1):.2f}s/step)")
 
-    state = run_hfl(state, train_step, sync_step, batches(), hfl.period,
-                    args.steps, on_step)
+    trace = None
+    if scenario is not None:
+        from repro.sim.scenarios import build_engine
+        engine = build_engine(scenario, hfl, seed=args.sim_seed)
+        state, trace = engine.run(state, train_step, sync_step, batches(),
+                                  args.steps, on_step=on_step)
+        m = trace.meta
+        print(f"[sim] scenario={scenario.name} discipline={m['discipline']} "
+              f"virtual-wallclock={trace.wallclock:.3f}s "
+              f"syncs={m['sync_launches']} "
+              f"fronthaul={m['bits_fronthaul_total']/8e6:.2f}MB")
+        if m.get("wireless"):
+            print(f"[sim] t_fl_iter={m['t_fl_iter_s']:.3f}s "
+                  f"t_hfl_iter={m['t_hfl_iter_s']:.3f}s "
+                  f"t_hfl_period={m['t_hfl_period_s']:.3f}s "
+                  f"(period<fl_iter: {m['t_hfl_period_s'] < m['t_fl_iter_s']})")
+        if args.trace_out:
+            with open(args.trace_out, "w") as f:
+                json.dump(_jsonable(trace.to_json()), f, indent=1)
+            print(f"[sim] trace -> {args.trace_out}")
+    else:
+        state = run_hfl(state, train_step, sync_step, batches(), hfl.period,
+                        args.steps, on_step)
 
     # held-out eval with the consensus model
     sp = serving_params(state)
@@ -113,12 +185,17 @@ def main(argv=None):
     logits, _ = forward(sp, toks, cfg, frontend_embeds=fe)
     lp = jax.nn.log_softmax(logits[:, -args.seq:].astype(jnp.float32), -1)
     eval_loss = float(-jnp.take_along_axis(lp[:, :-1], toks[:, 1:, None], -1).mean())
-    print(f"[train] first-loss={hist[0]:.4f} last-loss={hist[-1]:.4f} "
-          f"eval-loss={eval_loss:.4f}")
+    if hist:  # async with steps < H completes zero rounds -> no train losses
+        print(f"[train] first-loss={hist[0]:.4f} last-loss={hist[-1]:.4f} "
+              f"eval-loss={eval_loss:.4f}")
+    else:
+        print(f"[train] no training rounds completed; eval-loss={eval_loss:.4f}")
 
     if args.ckpt_dir:
         path = save_checkpoint(args.ckpt_dir, args.steps, state._asdict())
         print(f"[train] checkpoint -> {path}")
+    # one return shape for every mode; the wall-clock trace is exposed via
+    # --trace-out (scenario runs) rather than a third tuple element
     return hist, eval_loss
 
 

@@ -1,0 +1,19 @@
+"""Event-driven HCN simulator: couples the wireless model to training.
+
+The subsystem that turns the repo from a sync-kernel library into a system:
+a deterministic virtual-clock event engine (``events``), per-device runtime
+models (``devices``: compute-speed distributions, availability traces,
+random-waypoint mobility), a simulation engine (``engine``) that composes
+``wireless.latency`` UL/DL times with compute times and the *real*
+``make_cluster_train_step`` / ``make_sync_step`` training loop, and a named
+scenario registry (``scenarios``).
+"""
+from repro.sim.devices import DeviceFleet
+from repro.sim.engine import SimEngine, Trace
+from repro.sim.events import Event, EventQueue
+from repro.sim.scenarios import SCENARIOS, get_scenario
+
+__all__ = [
+    "DeviceFleet", "SimEngine", "Trace", "Event", "EventQueue",
+    "SCENARIOS", "get_scenario",
+]

@@ -1,0 +1,130 @@
+"""Per-device runtime models: compute speed, availability, mobility.
+
+A ``DeviceFleet`` carries the *dynamic* per-MU state the wireless topology
+does not: how fast each MU computes a local iteration (lognormal speed
+multipliers — the straggler source), whether it shows up for a round
+(Bernoulli availability traces — the dropout source), and where it is
+(random-waypoint mobility over the HCN disk, with re-association to the
+nearest SBS when it crosses a cluster boundary).
+
+Everything is driven by one ``numpy`` Generator seeded at construction, so
+a fleet replayed from the same seed produces bit-identical traces.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.wireless.topology import HCNTopology, uniform_disk
+
+
+class DeviceFleet:
+    """Dynamic state of the K MUs dropped on an ``HCNTopology``.
+
+    Parameters
+    ----------
+    compute_sigma : lognormal sigma of the per-MU compute-time multiplier
+        (normalised so the multiplier has mean 1; 0 = homogeneous fleet).
+    dropout : per-round probability that an MU is unavailable.
+    speed_mps : random-waypoint speed; 0 = static users (paper setting).
+    """
+
+    def __init__(
+        self,
+        topo: HCNTopology,
+        mus_per_cluster: int,
+        *,
+        compute_sigma: float = 0.0,
+        dropout: float = 0.0,
+        speed_mps: float = 0.0,
+        seed: int = 0,
+        compute_mult: Optional[np.ndarray] = None,
+    ):
+        self.topo = topo
+        self.rng = np.random.default_rng(seed)
+        self.pos, self.cid = topo.drop_users(mus_per_cluster)
+        self.K = len(self.cid)
+        self.dropout = float(dropout)
+        self.speed_mps = float(speed_mps)
+        if compute_mult is not None:
+            self.compute_mult = np.asarray(compute_mult, np.float64)
+            assert self.compute_mult.shape == (self.K,)
+        elif compute_sigma > 0:
+            z = self.rng.standard_normal(self.K)
+            # mean-1 lognormal: E[exp(sigma z - sigma^2/2)] = 1
+            self.compute_mult = np.exp(compute_sigma * z - compute_sigma**2 / 2)
+        else:
+            self.compute_mult = np.ones(self.K)
+        self._waypoint = self._draw_waypoints(self.K)
+
+    # --- compute ---------------------------------------------------------
+
+    def compute_times(self, base_compute_s: float) -> np.ndarray:
+        """Per-MU wall time of ONE local iteration [K]."""
+        return base_compute_s * self.compute_mult
+
+    # --- availability ----------------------------------------------------
+
+    def draw_available(self) -> np.ndarray:
+        """Per-round availability trace: True = MU participates [K] bool.
+
+        Consumes the fleet RNG, so calling once per round yields a
+        deterministic per-(seed, round) trace.
+        """
+        if self.dropout <= 0:
+            return np.ones(self.K, bool)
+        return self.rng.uniform(0.0, 1.0, self.K) >= self.dropout
+
+    # --- mobility --------------------------------------------------------
+
+    def _draw_waypoints(self, n: int) -> np.ndarray:
+        """Uniform waypoints in the HCN disk (random-waypoint model)."""
+        return uniform_disk(self.rng, n, self.topo.area_radius)
+
+    def advance(self, dt: float) -> None:
+        """Move every MU ``dt`` virtual seconds toward its waypoint.
+
+        An MU that reaches its waypoint inside ``dt`` draws a fresh one and
+        keeps moving with the leftover time budget (classic random waypoint,
+        zero pause time).
+        """
+        if self.speed_mps <= 0 or dt <= 0:
+            return
+        budget = np.full(self.K, dt * self.speed_mps)  # metres left to move
+        # enough passes to spend the whole budget: each consumes a full
+        # waypoint leg (~disk radius on average) or zeroes a lane. A fixed
+        # small count would silently under-move MUs for large dt.
+        max_legs = 8 + int(np.ceil(budget[0] / (0.25 * self.topo.area_radius)))
+        for _ in range(max_legs):
+            vec = self._waypoint - self.pos
+            dist = np.linalg.norm(vec, axis=1)
+            moving = budget > 0
+            arrive = moving & (dist <= budget)
+            if not moving.any():
+                break
+            # partial move toward the waypoint
+            part = moving & ~arrive
+            if part.any():
+                step = vec[part] / np.maximum(dist[part], 1e-12)[:, None]
+                self.pos[part] += step * budget[part, None]
+                budget[part] = 0.0
+            # arrivals: land on the waypoint, redraw, spend the leftover
+            if arrive.any():
+                self.pos[arrive] = self._waypoint[arrive]
+                budget[arrive] -= dist[arrive]
+                self._waypoint[arrive] = self._draw_waypoints(int(arrive.sum()))
+
+    def reassociate(self) -> np.ndarray:
+        """Re-attach every MU to its nearest SBS; returns new cid [K]."""
+        d = np.linalg.norm(
+            self.pos[:, None, :] - self.topo.sbs_pos[None, :, :], axis=2
+        )
+        self.cid = np.argmin(d, axis=1)
+        return self.cid
+
+    # --- helpers ---------------------------------------------------------
+
+    def cluster_members(self, n: int) -> np.ndarray:
+        """Indices of the MUs currently attached to cluster ``n``."""
+        return np.nonzero(self.cid == n)[0]

@@ -1,0 +1,558 @@
+"""Simulation engine: wall-clock scenario runs of the real training loop.
+
+Couples three layers that never met before this subsystem:
+
+  * the wireless model (``repro.wireless.latency``) — per-cluster UL/DL
+    times, fronthaul, frequency reuse — evaluated against the fleet's
+    *current* positions each round, so mobility changes the time axis;
+  * the device runtime model (``repro.sim.devices``) — per-MU compute
+    times, availability, mobility;
+  * the *real* jitted training loop (``make_cluster_train_step`` /
+    ``make_sync_step``) — the accuracy axis is produced by actual SGD on
+    actual models, not a convergence proxy.
+
+Time is virtual (``repro.sim.events``): a run is a pure function of
+(scenario, seed) and replays bit-identically.
+
+Three sync disciplines:
+
+  * ``lockstep`` — the paper's schedule: every cluster runs H intra-cluster
+    iterations, the MBS consensus happens when the slowest cluster arrives
+    (Γ^period = H·max_n Γ_n + Θ^U + Θ^D, eq. 21). Reproduces Fig. 3's
+    HFL-vs-FL latency ordering.
+  * ``deadline`` — straggler drop: each round has a deadline
+    (``deadline_factor`` × median per-MU round time); MUs that would finish
+    late are dropped for the round (their data is resampled from the
+    participants) and the round completes at the slowest *surviving* MU.
+  * ``async`` — clusters sync with the MBS on their own clocks; each
+    cluster's contribution is applied with a staleness-discounted weight
+    (``async_weight``), trading consensus freshness for zero straggler
+    stalls.
+
+Modelling simplifications (documented, not hidden): data residency is
+static — MU k always trains in cluster ``k // mus_per_cluster`` — while
+*radio* association follows mobility; the async downlink applies the fresh
+reference densely (its sparse payload is charged in the time model only);
+and the vmapped train step computes all clusters even when async advances
+only one (the price of reusing the real fused program).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HFLConfig, SimConfig
+from repro.sim.devices import DeviceFleet
+from repro.sim.events import Event, EventQueue
+from repro.wireless.latency import LatencyParams, fl_latency, hfl_latency
+from repro.wireless.topology import HCNTopology
+
+
+# ---------------------------------------------------------------------------
+# Trace
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Trace:
+    """Deterministic wall-clock-vs-training record of one simulation run."""
+
+    meta: dict = field(default_factory=dict)
+    rows: list = field(default_factory=list)
+
+    def add(self, **row) -> None:
+        self.rows.append(row)
+
+    @property
+    def wallclock(self) -> float:
+        return self.rows[-1]["t"] if self.rows else 0.0
+
+    def times(self, kind: Optional[str] = None):
+        return [r["t"] for r in self.rows if kind is None or r["kind"] == kind]
+
+    def losses(self):
+        return [(r["t"], r["loss"]) for r in self.rows if "loss" in r]
+
+    def to_json(self) -> dict:
+        return {"meta": self.meta, "rows": self.rows}
+
+
+# ---------------------------------------------------------------------------
+# Async staleness-weighted consensus
+# ---------------------------------------------------------------------------
+
+
+def async_weight(staleness: int, num_clusters: int, exp: float = 1.0) -> float:
+    """MBS application weight of one cluster's async contribution.
+
+    ``1/N`` matches the lockstep mean when every cluster arrives fresh;
+    the ``(1+s)^-exp`` discount shrinks contributions computed against a
+    reference that ``s`` other syncs have since moved.
+    """
+    return (1.0 / num_clusters) * (1.0 + float(staleness)) ** (-float(exp))
+
+
+def make_async_sync_step(hfl_cfg: HFLConfig) -> Callable:
+    """Per-cluster staleness-weighted sparse sync: (state, n, weight) -> state.
+
+    The uplink is the paper's Ω (whole-model top-(1-φ) of the drift, with
+    the SBS error buffer, bf16-rounded under ``quantized_sparse``); the MBS
+    applies ``weight * sent`` instead of the lockstep ``mean``; the cluster
+    then adopts the fresh reference.
+    """
+    from repro.core import sparsify as sp
+    from repro.utils import flatten as fl
+
+    impl = hfl_cfg.omega_impl
+    quantize = hfl_cfg.sync_mode == "quantized_sparse"
+
+    @partial(jax.jit, donate_argnums=0)
+    def async_sync(state, n, weight):
+        wref, ref_spec = fl.pack(state.w_ref)
+        wn_all, p_spec = fl.pack_stacked(state.params)
+        eps_all, eps_spec = fl.pack_stacked(state.eps)
+        Q = ref_spec.total
+
+        # --- uplink (Alg.5 l.24-27 for ONE cluster) ---
+        s = wn_all[n] - wref + hfl_cfg.beta_s * eps_all[n]
+        vals, idx = sp.pack_phi(s, hfl_cfg.phi_sbs_ul, impl=impl)
+        if quantize:
+            # the residual buffers the bf16 wire error too (receivers only
+            # ever see the rounded value), matching the lockstep paths
+            vals = vals.astype(jnp.bfloat16).astype(jnp.float32)
+        sent = sp.unpack_topk(vals, idx, Q)
+        new_eps_n = s - sent
+
+        # --- MBS: staleness-weighted application ---
+        new_wref = wref + weight * sent
+
+        # --- downlink: cluster adopts the fresh reference ---
+        new_wn = wn_all.at[n].set(new_wref)
+        new_eps = eps_all.at[n].set(new_eps_n)
+        return state._replace(
+            params=fl.unpack_stacked(new_wn, p_spec),
+            w_ref=fl.unpack(new_wref, ref_spec),
+            eps=fl.unpack_stacked(new_eps, eps_spec),
+        )
+
+    return async_sync
+
+
+# ---------------------------------------------------------------------------
+# State merge helpers — jitted with the outgoing state donated: one fused
+# program writing in place, instead of an eager per-leaf copy of the whole
+# stacked state (donating `new` too would leave surplus unaliasable buffers)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnums=2, donate_argnums=0)
+def _take_cluster_row(old, new, n: int):
+    """Keep only cluster ``n``'s update out of a full vmapped train step."""
+    row = lambda o, w: o.at[n].set(w[n])
+    return old._replace(
+        params=jax.tree.map(row, old.params, new.params),
+        opt=jax.tree.map(row, old.opt, new.opt),
+        step=new.step,
+    )
+
+
+@partial(jax.jit, donate_argnums=0)
+def _merge_clusters(old, new, keep):
+    """Keep updates only for clusters where ``keep[n]`` (others sat out)."""
+    k = jnp.asarray(keep)
+    sel = lambda o, w: jnp.where(k.reshape((-1,) + (1,) * (w.ndim - 1)), w, o)
+    return old._replace(
+        params=jax.tree.map(sel, old.params, new.params),
+        opt=jax.tree.map(sel, old.opt, new.opt),
+        step=new.step,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+class SimEngine:
+    """Drives (train_step, sync_step) under a scenario's wall clock.
+
+    With ``topo``/``fleet``/``lp`` unset the engine runs in *null-wireless*
+    mode: unit virtual time per iteration, zero comms time — exactly the
+    timeless lockstep loop ``core.schedule.run_hfl`` used to be (and now
+    adapts to).
+    """
+
+    def __init__(
+        self,
+        *,
+        period: int,
+        hfl_cfg: Optional[HFLConfig] = None,
+        sim_cfg: Optional[SimConfig] = None,
+        topo: Optional[HCNTopology] = None,
+        fleet: Optional[DeviceFleet] = None,
+        lp: Optional[LatencyParams] = None,
+        record: bool = True,
+    ):
+        # record=False skips trace rows (and the per-step loss
+        # materialisation they force): the run_hfl adapter discards the
+        # trace, and blocking the host on every step's loss would stop
+        # dispatch from running ahead like the historical loop did.
+        self._record = record
+        self.period = int(period)
+        self.hfl = hfl_cfg
+        self.sim = sim_cfg if sim_cfg is not None else SimConfig()
+        self.topo, self.fleet, self.lp = topo, fleet, lp
+        self.wireless = topo is not None and fleet is not None and lp is not None
+        if self.wireless:
+            assert hfl_cfg is not None, "wireless simulation needs hfl_cfg"
+            assert fleet.K == hfl_cfg.num_clusters * hfl_cfg.mus_per_cluster
+        self._aux = None  # cached hfl_latency aux for the current positions
+        self._train_launches = 0
+        self._sync_launches = 0
+        self._bits_access = 0.0
+        self._bits_fronthaul = 0.0
+
+    # --- public entry ----------------------------------------------------
+
+    def run(
+        self,
+        state,
+        train_step: Callable,
+        sync_step: Callable,
+        batches: Iterable,
+        num_steps: int,
+        on_step: Optional[Callable] = None,
+    ):
+        """-> (final_state, Trace). Deterministic in (scenario, seed) for a
+        FRESH engine: the fleet RNG and positions advance across calls, so
+        reusing one engine continues its world rather than replaying it —
+        build a new engine (``scenarios.build_engine``) per replayed run.
+
+        Under the ``async`` discipline ``sync_step`` is unused: per-cluster
+        consensus cannot be expressed by the all-cluster sync, so the
+        engine derives a staleness-weighted per-cluster sync from
+        ``hfl_cfg`` (``make_async_sync_step``) instead.
+        """
+        # fresh launch/byte accumulators so a reused engine's meta counts
+        # only its own run (its fleet state still advances, see above)
+        self._train_launches = 0
+        self._sync_launches = 0
+        self._bits_access = 0.0
+        self._bits_fronthaul = 0.0
+        disc = self.sim.discipline
+        if disc in ("lockstep", "deadline"):
+            return self._run_lockstep(
+                state, train_step, sync_step, batches, num_steps, on_step,
+                deadline=disc == "deadline",
+            )
+        if disc == "async":
+            return self._run_async(state, train_step, batches, num_steps, on_step)
+        raise ValueError(f"unknown discipline {disc!r}")
+
+    # --- wireless plumbing -----------------------------------------------
+
+    def _latency_aux(self) -> dict:
+        if self._aux is None:
+            _, self._aux = hfl_latency(
+                self.topo, self.fleet.pos, self.fleet.cid, self.lp,
+                H=self.period,
+                phi_mu_ul=self.hfl.phi_mu_ul, phi_sbs_dl=self.hfl.phi_sbs_dl,
+                phi_sbs_ul=self.hfl.phi_sbs_ul, phi_mbs_dl=self.hfl.phi_mbs_dl,
+                reuse=self.sim.reuse,
+            )
+        return self._aux
+
+    def _meta(self) -> dict:
+        meta = {
+            "scenario": self.sim.scenario,
+            "discipline": self.sim.discipline,
+            "seed": self.sim.seed,
+            "period": self.period,
+        }
+        if not self.wireless:
+            meta["wireless"] = False
+            return meta
+        comp_max = float(self.fleet.compute_times(self.sim.base_compute_s).max())
+        t_fl, _ = fl_latency(
+            self.topo, self.fleet.pos, self.lp,
+            phi_ul=self.hfl.phi_mu_ul, phi_dl=self.hfl.phi_mbs_dl,
+        )
+        per_iter, aux = hfl_latency(
+            self.topo, self.fleet.pos, self.fleet.cid, self.lp, H=self.period,
+            phi_mu_ul=self.hfl.phi_mu_ul, phi_sbs_dl=self.hfl.phi_sbs_dl,
+            phi_sbs_ul=self.hfl.phi_sbs_ul, phi_mbs_dl=self.hfl.phi_mbs_dl,
+            reuse=self.sim.reuse,
+        )
+        self._aux = aux
+        meta.update(
+            wireless=True,
+            t_fl_iter_s=t_fl + comp_max,
+            t_hfl_iter_s=per_iter + comp_max,
+            t_hfl_period_s=self.period * (per_iter + comp_max),
+        )
+        return meta
+
+    def _round_ctx(self, deadline: bool) -> dict:
+        """Latency/participation context for ONE upcoming H-period round."""
+        if not self.wireless:
+            return dict(iter_s=self.sim.base_compute_s, sync_s=0.0,
+                        mask=None, keep_clusters=None, dropped=0,
+                        participants=None, deadline_s=None)
+        hfl, lp, H = self.hfl, self.lp, self.period
+        aux = self._latency_aux()
+        comp = self.fleet.compute_times(self.sim.base_compute_s)
+        avail = self.fleet.draw_available()
+        K, N = self.fleet.K, hfl.num_clusters
+        ul_pay = lp.payload(hfl.phi_mu_ul)
+
+        # per-MU round time: H iterations of own compute + own UL + cluster DL
+        r = np.full(K, np.inf)
+        for n in range(N):
+            members = self.fleet.cluster_members(n)
+            if members.size:
+                rates = aux["mu_rates"][n]
+                r[members] = H * (comp[members] + ul_pay / rates + aux["gamma_dl"][n])
+
+        mask = avail.copy()
+        deadline_s = None
+        if deadline and self.sim.deadline_factor > 0:
+            finite = r[np.isfinite(r)]
+            deadline_s = self.sim.deadline_factor * float(np.median(finite))
+            mask &= r <= deadline_s
+
+        # cluster iteration time over the SURVIVING MUs only
+        it_n = np.zeros(N)
+        for n in range(N):
+            members = self.fleet.cluster_members(n)
+            if not members.size:
+                continue
+            m_keep = mask[members]
+            if not m_keep.any():
+                continue  # no survivors: the cluster sits this round out
+            rates = aux["mu_rates"][n]
+            it_n[n] = (
+                ul_pay / rates[m_keep].min()
+                + aux["gamma_dl"][n]
+                + comp[members[m_keep]].max()
+            )
+        iter_s = float(it_n.max()) if it_n.max() > 0 else self.sim.base_compute_s
+        sync_s = float(aux["theta_u"] + aux["theta_d"] + aux["gamma_dl"].max())
+
+        # static data layout: MU k trains in cluster k // mus_per_cluster
+        mpc = hfl.mus_per_cluster
+        keep_clusters = np.array(
+            [mask[n * mpc:(n + 1) * mpc].any() for n in range(N)]
+        )
+        return dict(
+            iter_s=iter_s, sync_s=sync_s,
+            mask=None if mask.all() else mask,
+            keep_clusters=None if keep_clusters.all() else keep_clusters,
+            dropped=int((~mask).sum()),
+            participants=int(mask.sum()),
+            deadline_s=deadline_s,
+        )
+
+    def _apply_participation(self, batch, mask: Optional[np.ndarray]):
+        """Resample dropped MUs' batch rows from their cluster's survivors."""
+        if mask is None:
+            return batch
+        N, mpc = self.hfl.num_clusters, self.hfl.mus_per_cluster
+        leaves = jax.tree.leaves(batch)
+        if not leaves or leaves[0].ndim < 2:
+            return batch
+        localB = leaves[0].shape[1]
+        if localB % mpc:
+            return batch  # unknown row layout; leave the batch untouched
+        bpm = localB // mpc
+        idx = np.tile(np.arange(localB)[None], (N, 1))
+        for n in range(N):
+            kept = [j for j in range(mpc) if mask[n * mpc + j]]
+            if not kept or len(kept) == mpc:
+                continue
+            src = [kept[j % len(kept)] for j in range(mpc)]
+            idx[n] = np.concatenate(
+                [np.arange(s * bpm, (s + 1) * bpm) for s in src]
+            )
+        idxj = jnp.asarray(idx)
+        rowsel = jnp.arange(N)[:, None]
+        take = lambda leaf: leaf[rowsel, idxj] if leaf.ndim >= 2 else leaf
+        return jax.tree.map(take, batch)
+
+    # --- byte accounting --------------------------------------------------
+
+    def _count_train(self, participants: Optional[int], clusters: int) -> None:
+        self._train_launches += 1
+        if self.wireless:
+            lp, hfl = self.lp, self.hfl
+            p = self.fleet.K if participants is None else participants
+            self._bits_access += (
+                p * lp.payload(hfl.phi_mu_ul) + clusters * lp.payload(hfl.phi_sbs_dl)
+            )
+
+    def _count_sync(self, clusters: int) -> None:
+        self._sync_launches += 1
+        if self.wireless:
+            lp, hfl = self.lp, self.hfl
+            self._bits_fronthaul += (
+                clusters * lp.payload(hfl.phi_sbs_ul) + lp.payload(hfl.phi_mbs_dl)
+            )
+
+    def _totals(self) -> dict:
+        return {
+            "train_launches": self._train_launches,
+            "sync_launches": self._sync_launches,
+            "bits_access_total": self._bits_access,
+            "bits_fronthaul_total": self._bits_fronthaul,
+        }
+
+    # --- lockstep / deadline ---------------------------------------------
+
+    def _run_lockstep(
+        self, state, train_step, sync_step, batches, num_steps, on_step,
+        *, deadline: bool,
+    ):
+        H = self.period
+        it = iter(batches)
+        trace = Trace(meta=self._meta())
+        t = 0.0
+        ctx: dict = {}
+        N = self.hfl.num_clusters if self.hfl is not None else None
+        for step in range(num_steps):
+            if step % H == 0:
+                ctx = self._round_ctx(deadline)
+            batch = self._apply_participation(next(it), ctx["mask"])
+            new_state, loss = train_step(state, batch)
+            if ctx["keep_clusters"] is not None:
+                state = _merge_clusters(state, new_state, ctx["keep_clusters"])
+            else:
+                state = new_state
+            t += ctx["iter_s"]
+            self._count_train(ctx["participants"], N if N is not None else 1)
+            if self._record:
+                trace.add(kind="train", t=t, step=step,
+                          loss=float(jnp.mean(loss)), dropped=ctx["dropped"])
+            if (step + 1) % H == 0:
+                state = sync_step(state)
+                t += ctx["sync_s"]
+                self._count_sync(N if N is not None else 1)
+                if self._record:
+                    trace.add(kind="sync", t=t, step=step,
+                              dropped=ctx["dropped"],
+                              deadline_s=ctx["deadline_s"],
+                              iter_s=ctx["iter_s"], sync_s=ctx["sync_s"])
+                if self.fleet is not None and self.fleet.speed_mps > 0:
+                    self.fleet.advance(H * ctx["iter_s"] + ctx["sync_s"])
+                    self.fleet.reassociate()
+                    self._aux = None  # positions changed: re-price the radio
+            if on_step is not None:
+                on_step(step, state, loss)
+        trace.meta.update(self._totals())
+        return state, trace
+
+    # --- async ------------------------------------------------------------
+
+    def _cluster_round_time(self, n: int, comp: Optional[np.ndarray]) -> float:
+        if not self.wireless:
+            return self.period * self.sim.base_compute_s
+        aux = self._latency_aux()
+        members = self.fleet.cluster_members(n)
+        comp_n = comp[members].max() if members.size else self.sim.base_compute_s
+        g = aux["gamma_ul"][n] + aux["gamma_dl"][n]
+        return float(
+            self.period * (comp_n + g) + aux["theta_u"] + aux["theta_d"]
+        )
+
+    def _run_async(self, state, train_step, batches, num_steps, on_step):
+        hfl = self.hfl
+        if hfl is None:
+            raise ValueError("async discipline needs hfl_cfg")
+        N, H = hfl.num_clusters, self.period
+        rounds = num_steps // H
+        trace = Trace(meta=self._meta())
+        if rounds == 0:
+            trace.meta.update(self._totals())
+            return state, trace
+        it = iter(batches)
+        q = EventQueue()
+        sync_n = make_async_sync_step(hfl)
+        comp = (
+            self.fleet.compute_times(self.sim.base_compute_s)
+            if self.fleet is not None else None
+        )
+        for n in range(N):
+            q.push(self._cluster_round_time(n, comp),
+                   Event("cluster_done", cluster=n, round=0))
+        global_updates = 0
+        last_pull = [0] * N
+        steps_done = 0
+        fleet_time = 0.0
+        mpc = hfl.mus_per_cluster
+        while len(q):
+            t, ev = q.pop()
+            n = ev.cluster
+            if self.fleet is not None and self.fleet.speed_mps > 0:
+                self.fleet.advance(t - fleet_time)
+                fleet_time = t
+                self.fleet.reassociate()
+                self._aux = None
+            # availability trace (dropout): unavailable MUs in this cluster's
+            # STATIC data slots sit the round out (their rows are resampled
+            # from the survivors); a fully-unavailable cluster idles the
+            # whole round. Round *times* are not availability-adjusted.
+            mask = None
+            dropped = 0
+            if self.fleet is not None and self.fleet.dropout > 0:
+                avail = self.fleet.draw_available()
+                slots = slice(n * mpc, (n + 1) * mpc)
+                dropped = int((~avail[slots]).sum())
+                if not avail[slots].any():
+                    if self._record:
+                        trace.add(kind="idle", t=t, cluster=int(n),
+                                  round=int(ev.round), dropped=dropped)
+                    if ev.round + 1 < rounds:
+                        q.push(t + self._cluster_round_time(n, comp),
+                               Event("cluster_done", cluster=n,
+                                     round=ev.round + 1))
+                    continue
+                if dropped:
+                    mask = np.ones(self.fleet.K, bool)
+                    mask[slots] = avail[slots]
+            members = (
+                self.fleet.cluster_members(n).size if self.fleet is not None
+                else hfl.mus_per_cluster
+            )
+            # state.step feeds step-indexed LR schedules; pin it to THIS
+            # cluster's per-round progress (round*H .. round*H + H), not the
+            # global launch count, which inflates N-fold under async and
+            # would decay the schedule N times too early.
+            state = state._replace(step=jnp.asarray(ev.round * H, jnp.int32))
+            loss = None
+            for _ in range(H):
+                batch = self._apply_participation(next(it), mask)
+                new_state, loss = train_step(state, batch)
+                state = _take_cluster_row(state, new_state, n)
+                steps_done += 1
+                self._count_train(max(members - dropped, 0), 1)
+            staleness = global_updates - last_pull[n]
+            w = async_weight(staleness, N, self.sim.staleness_exp)
+            state = sync_n(state, jnp.int32(n), jnp.float32(w))
+            global_updates += 1
+            last_pull[n] = global_updates
+            self._count_sync(1)
+            if self._record:
+                trace.add(kind="sync", t=t, step=steps_done - 1,
+                          cluster=int(n), round=int(ev.round),
+                          staleness=int(staleness), weight=float(w),
+                          dropped=dropped, loss=float(jnp.mean(loss)))
+            if on_step is not None:
+                on_step(steps_done - 1, state, loss)
+            if ev.round + 1 < rounds:
+                q.push(t + self._cluster_round_time(n, comp),
+                       Event("cluster_done", cluster=n, round=ev.round + 1))
+        trace.meta.update(self._totals())
+        return state, trace

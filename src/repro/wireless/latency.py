@@ -70,11 +70,18 @@ def hfl_latency(
     m_cluster = lp.M // n_colors  # sub-carriers available inside one cluster
     kw = dict(B0=lp.B0, Pmax=lp.p_mu, N0=lp.n0, alpha=lp.alpha, ber=lp.ber)
 
-    gamma_ul, gamma_dl, mean_ul = [], [], []
+    gamma_ul, gamma_dl, mean_ul, mu_rates = [], [], [], []
     for n in range(topo.num_clusters):
         sel = cid == n
+        if not np.any(sel):
+            # mobility can empty a cluster; it then contributes no latency
+            gamma_ul.append(0.0)
+            gamma_dl.append(0.0)
+            mu_rates.append(np.zeros(0))
+            continue
         d = topo.dist_to_sbs(mu_pos[sel], cid[sel])
         _, rates = allocate_subcarriers(d, m_cluster, **kw)
+        mu_rates.append(rates)
         gamma_ul.append(lp.payload(phi_mu_ul) / rates.min())
         mean_ul.append(rates.mean())
         gamma_dl.append(
@@ -86,7 +93,7 @@ def hfl_latency(
     gamma_ul, gamma_dl = np.array(gamma_ul), np.array(gamma_dl)
 
     # fronthaul (SBS <-> MBS): paper assumes 100x the access-link rate
-    fh_rate = lp.fronthaul_gain * float(np.mean(mean_ul))
+    fh_rate = lp.fronthaul_gain * float(np.mean(mean_ul)) if mean_ul else np.inf
     theta_u = lp.payload(phi_sbs_ul) / fh_rate
     theta_d = lp.payload(phi_mbs_dl) / fh_rate
 
@@ -96,4 +103,7 @@ def hfl_latency(
     return per_iter, {
         "gamma_ul": gamma_ul, "gamma_dl": gamma_dl,
         "theta_u": theta_u, "theta_d": theta_d,
+        # per-cluster per-MU UL rates (the simulator's deadline discipline
+        # charges each MU its own UL time, not just the cluster min)
+        "mu_rates": mu_rates, "m_cluster": m_cluster,
     }

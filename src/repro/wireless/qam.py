@@ -42,6 +42,42 @@ def _rate_at_threshold(th, *, B0, Pmax, m, N0, d, alpha, ber):
     return B0 * np.log2(1.0 + snr_eff) * np.exp(-th)
 
 
+def optimal_rate_vec(
+    d, *, B0: float, Pmax: float, m: int, N0: float, alpha: float, ber: float,
+    iters: int = 60,
+) -> np.ndarray:
+    """Vectorised ``optimal_rate_per_subcarrier`` over a distance array.
+
+    Golden-section search with per-element brackets; used by the simulator's
+    100k-MU latency-sampling scale-out, where a Python loop over users would
+    dominate. ~1e-7 relative agreement with the scalar path.
+    """
+    d = np.asarray(d, dtype=np.float64)
+    gr = (np.sqrt(5.0) - 1.0) / 2.0
+    lo = np.full(d.shape, 1e-6)
+    hi = np.full(d.shape, 10.0)
+    kw = dict(B0=B0, Pmax=Pmax, m=m, N0=N0, d=d, alpha=alpha, ber=ber)
+    c = hi - gr * (hi - lo)
+    dd = lo + gr * (hi - lo)
+    fa = _rate_at_threshold(c, **kw)
+    fb = _rate_at_threshold(dd, **kw)
+    for _ in range(iters):
+        take = fa > fb  # shrink from the right where the left probe wins
+        hi = np.where(take, dd, hi)
+        lo = np.where(take, lo, c)
+        # per lane only ONE probe is new (the survivor slides over), so a
+        # single vector evaluation per iteration suffices
+        x_new = np.where(take, hi - gr * (hi - lo), lo + gr * (hi - lo))
+        f_new = _rate_at_threshold(x_new, **kw)
+        c, dd, fa, fb = (
+            np.where(take, x_new, dd),
+            np.where(take, c, x_new),
+            np.where(take, f_new, fb),
+            np.where(take, fa, f_new),
+        )
+    return np.maximum(fa, fb)
+
+
 def optimal_rate_per_subcarrier(
     *, B0: float, Pmax: float, m: int, N0: float, d: float, alpha: float, ber: float,
     iters: int = 80,

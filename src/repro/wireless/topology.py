@@ -7,6 +7,20 @@ from dataclasses import dataclass, field
 import numpy as np
 
 
+def uniform_disk(rng, n: int, radius: float, center=(0.0, 0.0)) -> np.ndarray:
+    """``n`` points uniform on a disk: sqrt-radial draw, then angle.
+
+    The one uniform-drop primitive shared by user placement, random-waypoint
+    mobility, and the simulator's vectorized latency sampling — change the
+    drop distribution here, everywhere follows.
+    """
+    r = radius * np.sqrt(rng.uniform(0, 1, n))
+    th = rng.uniform(0, 2 * np.pi, n)
+    return np.stack(
+        [center[0] + r * np.cos(th), center[1] + r * np.sin(th)], axis=1
+    )
+
+
 def hex_centers(radius_in: float = 250.0):
     """Centres of the 7-hexagon flower (central + 6 ring), inscribed r given."""
     # distance between adjacent hex centres = 2 * inradius
@@ -35,10 +49,8 @@ class HCNTopology:
         inscribed circle; returns (positions [K,2], cluster_id [K])."""
         pos, cid = [], []
         for n, c in enumerate(self.sbs_pos):
-            r = self.hex_inradius * np.sqrt(self.rng.uniform(0, 1, mus_per_cluster))
-            th = self.rng.uniform(0, 2 * np.pi, mus_per_cluster)
-            p = np.stack([c[0] + r * np.cos(th), c[1] + r * np.sin(th)], axis=1)
-            pos.append(p)
+            pos.append(uniform_disk(self.rng, mus_per_cluster,
+                                    self.hex_inradius, center=c))
             cid.extend([n] * mus_per_cluster)
         return np.concatenate(pos), np.array(cid)
 

@@ -98,6 +98,69 @@ def test_sparsification_reduces_latency():
     assert sparse < 0.3 * dense
 
 
+def test_single_cluster_topology():
+    """Degenerate HCN: one hexagon. Latency composes; coloring is trivial."""
+    topo = HCNTopology(num_clusters=1, seed=3)
+    pos, cid = topo.drop_users(3)
+    assert (cid == 0).all() and pos.shape == (3, 2)
+    cols, n_colors = topo.coloring(1)
+    assert n_colors == 1 and (cols == 0).all()
+    lp = LatencyParams(model_params=1e6)
+    t, aux = hfl_latency(topo, pos, cid, lp, H=2)
+    assert np.isfinite(t) and t > 0
+    assert aux["gamma_ul"].shape == (1,) and aux["gamma_dl"].shape == (1,)
+
+
+def test_reuse7_coloring_and_latency():
+    """reuse=7: each of the 7 clusters gets its own color, so each sees
+    M // 7 sub-carriers — strictly slower UL than full spatial reuse."""
+    topo = HCNTopology(seed=0)
+    cols, n_colors = topo.coloring(7)
+    assert n_colors == 7
+    assert sorted(cols.tolist()) == list(range(7))
+    pos, cid = topo.drop_users(2)
+    lp = LatencyParams(model_params=1e6)
+    t1, aux1 = hfl_latency(topo, pos, cid, lp, H=2, reuse=1)
+    t7, aux7 = hfl_latency(topo, pos, cid, lp, H=2, reuse=7)
+    assert aux7["m_cluster"] == lp.M // 7
+    assert t7 > t1  # fewer sub-carriers per cluster -> higher latency
+
+
+def test_fl_latency_single_mu():
+    """One MU: rates.min() over a length-1 allocation must not degenerate."""
+    topo = HCNTopology(num_clusters=1, seed=5)
+    pos, _ = topo.drop_users(1)
+    lp = LatencyParams(model_params=1e6)
+    t, aux = fl_latency(topo, pos, lp)
+    assert np.isfinite(t) and t > 0
+    assert aux["t_ul"] > 0 and aux["t_dl"] > 0
+    # all M sub-carriers go to the single MU: sparser payload is faster
+    t_sparse, _ = fl_latency(topo, pos, lp, phi_ul=0.99, phi_dl=0.9)
+    assert t_sparse < t
+
+
+def test_hfl_latency_tolerates_empty_cluster():
+    """Mobility can empty a cluster; it must contribute zero latency, not
+    crash the allocator."""
+    topo = HCNTopology(seed=0)
+    pos, cid = topo.drop_users(2)
+    cid = cid.copy()
+    cid[cid == 3] = 0  # re-associate cluster 3's MUs away
+    lp = LatencyParams(model_params=1e6)
+    t, aux = hfl_latency(topo, pos, cid, lp, H=2)
+    assert np.isfinite(t) and t > 0
+    assert aux["gamma_ul"][3] == 0.0 and aux["gamma_dl"][3] == 0.0
+    assert aux["mu_rates"][3].size == 0
+
+
+def test_optimal_rate_vec_matches_scalar():
+    from repro.wireless.qam import optimal_rate_vec
+    d = np.array([60.0, 150.0, 420.0, 700.0])
+    vec = optimal_rate_vec(d, m=2, **_KW)
+    scal = np.array([optimal_rate_per_subcarrier(m=2, d=float(x), **_KW) for x in d])
+    np.testing.assert_allclose(vec, scal, rtol=1e-5)
+
+
 def test_speedup_grows_with_pathloss():
     """Paper Fig. 4: speedup improves as alpha increases."""
     topo = HCNTopology(seed=0)
