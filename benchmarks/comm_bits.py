@@ -1,0 +1,127 @@
+"""Codec benchmark: measured bits/param vs φ, encode throughput, crossover.
+
+Sparsifies a fixed random flat vector at each φ with the REAL payload path
+(``core.sparsify.pack_phi``) and measures every registered codec on the
+resulting ``(values, indices)`` payloads:
+
+  * bits/param per (codec, φ) — byte-accurate stream lengths, with the two
+    acceptance invariants asserted inline: ``dense-f32`` at φ=0 equals the
+    analytic ``LatencyParams.payload(0.0)`` bit-for-bit, and at φ=0.99 at
+    least one sparse codec beats the idealized ``32·(1-φ)`` bits/param.
+  * encode throughput (payload entries/s of ``encode``, host path).
+  * the ``best`` meta-codec's winner per φ and the bitmap↔delta-stream
+    crossover (bitmap's Q-bit mask is flat in φ; the delta streams shrink
+    with k, so they take over as φ → 1).
+
+Writes machine-readable ``benchmarks/artifacts/BENCH_comm.json``.
+
+  PYTHONPATH=src python -m benchmarks.comm_bits
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.comm.codecs import CODECS, get_codec
+from repro.core import sparsify as sp
+from repro.wireless.latency import LatencyParams
+
+PHIS = (0.0, 0.9, 0.99)
+CROSSOVER_PHIS = (0.5, 0.75, 0.9, 0.95, 0.97, 0.99, 0.995, 0.999)
+
+
+def _payload(x, phi):
+    if phi <= 0.0:
+        flat = np.asarray(x, np.float32).reshape(-1)
+        return flat, np.arange(flat.size, dtype=np.int32)
+    vals, idx = sp.pack_phi(x, phi)
+    return np.asarray(vals, np.float32), np.asarray(idx, np.int32)
+
+
+def run(size: int = 1 << 18, seed: int = 0, throughput_phi: float = 0.99):
+    """-> (rows for the CSV harness, artifact dict)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (size,))
+    lp = LatencyParams(model_params=float(size))
+
+    per_codec = {name: {} for name in CODECS}
+    for phi in PHIS:
+        vals, idx = _payload(x, phi)
+        for name, codec in CODECS.items():
+            per_codec[name][str(phi)] = codec.measure_bits(vals, idx, size) / size
+
+    # acceptance invariants (fail loudly here, not in a notebook later)
+    assert per_codec["dense-f32"]["0.0"] * size == lp.payload(0.0), \
+        "dense-f32 must equal the analytic payload at phi=0 bit-for-bit"
+    analytic_99 = 32.0 * (1.0 - 0.99)
+    sparse_wins = [n for n, r in per_codec.items()
+                   if n != "best" and not n.startswith("dense")
+                   and r["0.99"] < analytic_99]
+    assert sparse_wins, "no sparse codec beats 32*(1-phi) bits/param at 0.99"
+
+    # encode throughput on the φ=0.99 payload (host path; entries/s)
+    vals, idx = _payload(x, throughput_phi)
+    throughput = {}
+    for name, codec in CODECS.items():
+        t0 = time.perf_counter()
+        reps = 0
+        while time.perf_counter() - t0 < 0.2:
+            codec.encode(vals, idx, size)
+            reps += 1
+        dt = (time.perf_counter() - t0) / reps
+        throughput[name] = vals.size / dt
+
+    # crossover: the best meta-codec's winner along a φ sweep
+    best = get_codec("best")
+    winners = {}
+    for phi in CROSSOVER_PHIS:
+        v, i = _payload(x, phi)
+        codec, bits = best.choose(v, i, size)
+        winners[str(phi)] = {"codec": codec.name, "bits_per_param": bits / size}
+    crossover = None
+    prev = None
+    for phi in CROSSOVER_PHIS:
+        w = winners[str(phi)]["codec"]
+        if prev is not None and prev.startswith("bitmap") and w.startswith("delta"):
+            crossover = phi
+        prev = w
+
+    artifact = {
+        "size": size,
+        "phis": list(PHIS),
+        "bits_per_param": per_codec,
+        "analytic_bits_per_param": {str(p): 32.0 * (1.0 - p) for p in PHIS},
+        "dense_f32_matches_analytic_phi0": True,  # asserted above
+        "sparse_codecs_beating_analytic_at_0.99": sparse_wins,
+        "encode_entries_per_s": throughput,
+        "best_winner_by_phi": winners,
+        "bitmap_to_delta_crossover_phi": crossover,
+    }
+    rows = [
+        (f"comm/{name}",
+         ",".join(f"phi{p}={per_codec[name][str(p)]:.4g}b/param" for p in PHIS)
+         + f",enc={throughput[name]:.3g}entries/s")
+        for name in CODECS
+    ]
+    rows.append(("comm/crossover",
+                 f"bitmap->delta@phi={crossover},"
+                 f"winner@0.99={winners['0.99']['codec']}"))
+    return rows, artifact
+
+
+def main():
+    rows, artifact = run()
+    os.makedirs("benchmarks/artifacts", exist_ok=True)
+    path = "benchmarks/artifacts/BENCH_comm.json"
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=1, default=float)
+    for tag, metrics in rows:
+        print(f"{tag},{metrics}")
+    print(f"# artifact -> {path}")
+
+
+if __name__ == "__main__":
+    main()

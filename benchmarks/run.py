@@ -1,10 +1,11 @@
 """Benchmark harness — one entry per paper table/figure + the roofline
-report. Prints CSV: name,derived-metrics. The ``sim`` entry additionally
-writes ``benchmarks/artifacts/BENCH_sim.json`` (virtual wall-clock per
-scenario, launches, bytes synced) so the perf trajectory is machine-
-readable across PRs.
+report. Prints CSV: name,derived-metrics. The ``sim`` and ``comm`` entries
+additionally write ``benchmarks/artifacts/BENCH_sim.json`` (virtual
+wall-clock per scenario, launches, bytes synced) and ``BENCH_comm.json``
+(measured bits/param vs φ per codec, encode throughput, codec crossover)
+so the perf trajectory is machine-readable across PRs.
 
-  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig3,fig4,...]
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig3,comm,...]
 """
 import argparse
 import json
@@ -109,6 +110,19 @@ def bench_fused_sync(omega_impl="topk"):
     ]
 
 
+def bench_comm():
+    """Payload codecs: measured bits/param vs φ per codec, encode
+    throughput, bitmap↔delta crossover. Writes BENCH_comm.json."""
+    from benchmarks.comm_bits import run
+    rows, artifact = run()
+    os.makedirs("benchmarks/artifacts", exist_ok=True)
+    path = "benchmarks/artifacts/BENCH_comm.json"
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=1, default=float)
+    rows.append(("comm/artifact", path))
+    return rows
+
+
 def bench_sim():
     """Event-driven HCN simulator: virtual wall-clock per scenario, train/
     sync launches, access+fronthaul bytes. Writes BENCH_sim.json."""
@@ -134,6 +148,7 @@ ALL = {
     "kernel": bench_dgc_kernel,
     "sync": bench_fused_sync,
     "sim": bench_sim,
+    "comm": bench_comm,
 }
 
 

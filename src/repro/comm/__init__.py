@@ -1,0 +1,19 @@
+"""Byte-accurate payload codecs + measured-bits latency accounting.
+
+The wireless model's analytic payload ``Q·(1-φ)·bits_per_param`` prices an
+idealized transfer: no index stream, no headers, no value quantization. This
+subsystem closes the loop with the *actual* bits on the air interface: the
+flat-buffer sync's real ``(values, indices)`` payloads are encoded by
+registered codecs (``repro.comm.codecs``), their exact stream lengths are
+recorded per link (``repro.comm.accounting``), and the simulator prices
+events with measured bits when ``HFLConfig.payload_accounting="measured"``.
+"""
+from repro.comm.codecs import CODECS, Codec, get_codec, list_codecs
+from repro.comm.accounting import (
+    LINKS, PayloadLedger, access_bits, make_sync_probe,
+)
+
+__all__ = [
+    "CODECS", "Codec", "get_codec", "list_codecs",
+    "LINKS", "PayloadLedger", "access_bits", "make_sync_probe",
+]

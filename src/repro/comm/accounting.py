@@ -1,0 +1,200 @@
+"""Measured-bits payload accounting for the HCN simulator.
+
+Three pieces close the loop between the codec layer and the wireless model:
+
+  * ``PayloadLedger``    — per-link record of measured bits. Links follow
+                           the paper's topology: ``mu_ul`` (MU→SBS access
+                           uplink), ``sbs_dl`` (SBS→MU broadcast downlink),
+                           ``sbs_ul``/``mbs_dl`` (SBS↔MBS fronthaul).
+  * ``make_sync_probe``  — a jitted function computing, from the live
+                           ``HFLState``, the exact ``(values, indices)``
+                           payloads the flat-buffer sync is about to put on
+                           the fronthaul, and their codec-measured bit
+                           counts (``measure_bits_jax``, so only scalars
+                           leave the device). It mirrors
+                           ``core.hfl._make_flat_local_sync`` operation for
+                           operation — same ``pack_phi`` impl, same wire
+                           rounding — so the measured payload IS the
+                           transmitted payload.
+  * ``access_bits``      — the per-iteration access links (MU→SBS uplink,
+                           SBS→MU downlink) are never materialized by the
+                           fused TPU train step (GSPMD inserts a dense
+                           all-reduce), so measured mode prices them with
+                           the codec applied to a *synthetic* payload with
+                           the exact keep count and uniformly spread
+                           indices. Deterministic, byte-accurate for the
+                           codec, and documented as a modelling
+                           simplification (not hidden).
+
+``payload_accounting="analytic"`` keeps the paper's idealized
+``Q·(1-φ)·bits_per_param`` pricing; ``"measured"`` switches the simulator
+(``sim.engine``) to these measured counts, both for event pricing (via the
+explicit bit overrides on ``wireless.latency.fl_latency``/``hfl_latency``)
+and for the trace's byte totals.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.codecs import Codec, get_codec
+
+LINKS = ("mu_ul", "sbs_dl", "sbs_ul", "mbs_dl")
+ACCESS_LINKS = ("mu_ul", "sbs_dl")
+FRONTHAUL_LINKS = ("sbs_ul", "mbs_dl")
+
+
+# ---------------------------------------------------------------------------
+# Ledger
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PayloadLedger:
+    """Per-link measured-bit totals for one simulation run."""
+
+    codec: str
+    size: int  # Q: flat model length the payloads index into
+    bits: Dict[str, float] = field(default_factory=lambda: {l: 0.0 for l in LINKS})
+    events: Dict[str, int] = field(default_factory=lambda: {l: 0 for l in LINKS})
+
+    def record(self, link: str, bits, *, events: int = 1) -> float:
+        if link not in self.bits:
+            raise KeyError(f"unknown link {link!r}; choose from {LINKS}")
+        b = float(bits)
+        self.bits[link] += b
+        self.events[link] += events
+        return b
+
+    @property
+    def bits_access_total(self) -> float:
+        return sum(self.bits[l] for l in ACCESS_LINKS)
+
+    @property
+    def bits_fronthaul_total(self) -> float:
+        return sum(self.bits[l] for l in FRONTHAUL_LINKS)
+
+    def summary(self) -> dict:
+        out = {"codec": self.codec, "payload_size": self.size}
+        for l in LINKS:
+            out[f"bits_{l}"] = self.bits[l]
+            out[f"events_{l}"] = self.events[l]
+        total_payloads = sum(self.events.values())
+        if total_payloads:
+            out["bits_per_param_mean"] = (
+                sum(self.bits.values()) / (total_payloads * self.size)
+            )
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Synthetic access-link measurement
+# ---------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=256)
+def _access_bits_cached(codec_name: str, size: int, phi: float) -> int:
+    from repro.core.sparsify import keep_count
+
+    codec = get_codec(codec_name)
+    if phi <= 0.0:
+        idx = np.arange(size, dtype=np.int32)
+        return int(codec.measure_bits(np.ones(size, np.float32), idx, size))
+    k = keep_count(size, phi)
+    # uniformly spread indices: the deterministic stand-in for a payload
+    # that is never materialized (strictly increasing for k <= size)
+    idx = np.floor(np.arange(k) * (size / k)).astype(np.int32)
+    return int(codec.measure_bits(np.ones(k, np.float32), idx, size))
+
+
+def access_bits(codec: "str | Codec", size: int, phi: float) -> int:
+    """Measured bits of a synthetic uniform-index payload: the per-iteration
+    access-link price under a codec (see module docstring)."""
+    name = codec if isinstance(codec, str) else codec.name
+    return _access_bits_cached(name, int(size), float(phi))
+
+
+# ---------------------------------------------------------------------------
+# Fronthaul probe: measure the REAL sync payloads
+# ---------------------------------------------------------------------------
+
+
+def make_sync_probe(hfl_cfg, codec: "str | Codec"):
+    """-> jitted ``probe(state) -> (sbs_ul_bits [N], mbs_dl_bits)``.
+
+    Recomputes exactly the payload selection the flat local sync will run
+    (drift + discounted error, whole-vector Ω per cluster; consensus +
+    discounted error, Ω downlink) and measures each payload with the codec's
+    traced bit counter. Runs *before* the (donating) sync step on the same
+    state, so probe payloads and wire payloads are identical traces of
+    identical inputs. Costs one extra pack_phi per hop — the price of
+    measured accounting, paid only when it is enabled.
+    """
+    from repro.core import sparsify as sp
+    from repro.core.hfl import _wire_round, wire_format_of
+    from repro.utils import flatten as fl
+
+    codec = get_codec(codec) if isinstance(codec, str) else codec
+    impl = hfl_cfg.omega_impl
+    wire = wire_format_of(hfl_cfg)
+    N = hfl_cfg.num_clusters
+
+    if hfl_cfg.sync_mode == "dense":
+        # dense consensus ships the raw model both ways: static 32·Q bits
+        # per hop, no Ω selection to mirror
+        def dense_probe(state):
+            Q = fl.spec_of(state.w_ref).total
+            return (np.full(N, 32.0 * Q), np.float64(32.0 * Q))
+
+        return dense_probe
+
+    @jax.jit
+    def probe(state):
+        wref, ref_spec = fl.pack(state.w_ref)
+        e, _ = fl.pack(state.e)
+        wn, _ = fl.pack_stacked(state.params)
+        eps, _ = fl.pack_stacked(state.eps)
+        Q = ref_spec.total
+
+        s = wn - wref[None, :] + hfl_cfg.beta_s * eps  # [N, Q]
+        ul_bits, sents = [], []
+        for n in range(N):
+            vals, idx = sp.pack_phi(s[n], hfl_cfg.phi_sbs_ul, impl=impl)
+            if wire:
+                vals = _wire_round(vals, wire)
+            ul_bits.append(codec.measure_bits_jax(vals, idx, Q))
+            sents.append(sp.unpack_topk(vals, idx, Q))
+
+        delta = sum(sents) / N + hfl_cfg.beta_m * e
+        dvals, didx = sp.pack_phi(delta, hfl_cfg.phi_mbs_dl, impl=impl)
+        dl_bits = codec.measure_bits_jax(dvals, didx, Q)
+        return jnp.stack(ul_bits), dl_bits
+
+    return probe
+
+
+# ---------------------------------------------------------------------------
+# index_bits deprecation (satellite)
+# ---------------------------------------------------------------------------
+
+
+def warn_index_bits_deprecated(lp) -> None:
+    """``LatencyParams.index_bits`` was the hand-waved stand-in for index
+    overhead; the measured path counts the real index streams. Keep the
+    ``=0`` default for paper-figure reproduction; combining a nonzero value
+    with measured accounting double-charges indices."""
+    if getattr(lp, "index_bits", 0.0):
+        warnings.warn(
+            "LatencyParams.index_bits is deprecated under "
+            "payload_accounting='measured': codecs already count the real "
+            "index streams, so a nonzero index_bits double-charges them. "
+            "Keep index_bits=0 (the paper's accounting).",
+            DeprecationWarning,
+            stacklevel=3,
+        )

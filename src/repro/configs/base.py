@@ -187,6 +187,22 @@ class HFLConfig:
     # sync over one contiguous vector (one top-k + one all-gather + one
     # scatter-add); "leaf" is the legacy per-pytree-leaf reference path.
     sync_layout: str = "flat"
+    # wire value format under quantized_sparse: bf16 (historical) or q8
+    # (8-bit linear quantization; the error feeds back through eps/e like
+    # the sparsification error — see core.hfl._wire_round)
+    wire_format: str = "bf16"
+    # payload accounting for the simulator's latency pricing + byte totals:
+    #   analytic -- the paper's idealized Q·(1-φ)·bits_per_param
+    #   measured -- byte-accurate codec streams (repro.comm): real
+    #               (values, indices) payloads on the fronthaul, synthetic
+    #               uniform-index payloads on the access links
+    payload_accounting: str = "analytic"
+    # codec used by measured accounting (repro.comm.codecs registry)
+    codec: str = "delta-varint"
+    # async discipline: sparsify the MBS->cluster downlink too, with one
+    # DL error buffer per cluster (engine-threaded; see
+    # sim.engine.make_async_sync_step)
+    async_dl_sparse: bool = False
 
     @property
     def total_mus(self) -> int:

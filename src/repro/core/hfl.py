@@ -111,15 +111,31 @@ def make_cluster_train_step(loss_fn: Callable, optimizer, lr_schedule):
 # ---------------------------------------------------------------------------
 
 
-def _qround(x):
-    """bf16 wire-format round-trip (what the receiver reconstructs)."""
-    return x.astype(jnp.bfloat16).astype(jnp.float32)
+def _wire_round(x, fmt: str):
+    """Wire-format round-trip: what the receiver reconstructs from the
+    transmitted values under ``HFLConfig.wire_format``.
+
+      * ``bf16`` -- bfloat16 round-to-nearest-even (the historical
+        ``quantized_sparse`` wire).
+      * ``q8``   -- 8-bit linear quantization, scale = max|x|/127 carried
+        as an f32 header on the wire. All arithmetic is f32 so this is
+        bit-identical to the host codec (``repro.comm.codecs`` q8 formats),
+        and the quantization error lands in the same ``eps``/``e`` error
+        buffers as the sparsification error.
+    """
+    if fmt == "bf16":
+        return x.astype(jnp.bfloat16).astype(jnp.float32)
+    if fmt == "q8":
+        amax = jnp.max(jnp.abs(x))
+        scale = jnp.where(amax > 0, amax / jnp.float32(127.0), jnp.float32(1.0))
+        return jnp.clip(jnp.round(x / scale), -127.0, 127.0) * scale
+    raise ValueError(fmt)
 
 
 # ---- flat layout: the paper's whole-model Ω, one launch per hop -----------
 
 
-def _make_flat_local_sync(hfl_cfg, quantize):
+def _make_flat_local_sync(hfl_cfg, wire):
     """Single-process whole-vector sync (mesh=None): the cluster axis is a
     leading array axis and the cross-pod exchange is a local mean."""
     impl = hfl_cfg.omega_impl
@@ -138,8 +154,8 @@ def _make_flat_local_sync(hfl_cfg, quantize):
         sents, new_eps = [], []
         for n in range(N):  # static unroll; N is small
             vals, idx = sp.pack_phi(s[n], hfl_cfg.phi_sbs_ul, impl=impl)
-            if quantize:
-                vals = _qround(vals)
+            if wire:
+                vals = _wire_round(vals, wire)
             sent = sp.unpack_topk(vals, idx, Q)
             sents.append(sent)
             new_eps.append(s[n] - sent)
@@ -147,8 +163,8 @@ def _make_flat_local_sync(hfl_cfg, quantize):
         # --- MBS side: consensus + discounted error + top-k downlink ---
         delta = sum(sents) / N + hfl_cfg.beta_m * e
         dvals, didx = sp.pack_phi(delta, hfl_cfg.phi_mbs_dl, impl=impl)
-        if quantize:
-            dvals = _qround(dvals)
+        if wire:
+            dvals = _wire_round(dvals, wire)
         d = sp.unpack_topk(dvals, didx, Q)
         new_e = delta - d
         new_wref = wref + d
@@ -165,7 +181,7 @@ def _make_flat_local_sync(hfl_cfg, quantize):
     return flat_sync
 
 
-def _flat_shard_sync(params, w_ref, eps, e, *, hfl_cfg, quantize):
+def _flat_shard_sync(params, w_ref, eps, e, *, hfl_cfg, wire):
     """shard_map body: whole-LOCAL-vector sync for this device's shards.
 
     params/eps leaves [C, *loc] (C = clusters hosted per pod, usually 1);
@@ -188,12 +204,12 @@ def _flat_shard_sync(params, w_ref, eps, e, *, hfl_cfg, quantize):
     vals_l, idx_l, eps_rows = [], [], []
     for c in range(C):  # static; C == N // num_pods, normally 1
         vals, idx = sp.pack_phi(s[c], hfl_cfg.phi_sbs_ul, impl=impl)
-        if quantize:
+        if wire:
             # quantize BEFORE accounting the residual: eps must buffer the
-            # bf16 quantization error too, since receivers only ever see
-            # the bf16 value (keeps this path consistent with the local
+            # wire quantization error too, since receivers only ever see
+            # the rounded value (keeps this path consistent with the local
             # flat/leaf paths and preserves exact drift conservation)
-            vals = _qround(vals)
+            vals = _wire_round(vals, wire)
         sent = sp.unpack_topk(vals, idx, Q)
         eps_rows.append(s[c] - sent)
         vals_l.append(vals)
@@ -202,14 +218,16 @@ def _flat_shard_sync(params, w_ref, eps, e, *, hfl_cfg, quantize):
     idx = jnp.stack(idx_l)
 
     # --- cross-pod exchange: 2·C·k values per hop instead of C·Q ---
-    if quantize:
+    if wire == "bf16":
         # lossless now (vals already round-tripped); the barriers pin the
         # bf16 cast to THIS side of the gather: XLA's algebraic simplifier
         # otherwise rewrites convert(all_gather(bf16)) into
-        # all_gather(f32), putting f32 back on the wire
+        # all_gather(f32), putting f32 back on the wire. (q8 values are
+        # already exact multiples of the scale; the gather stays f32 as a
+        # simulation artifact — the byte-accurate stream is the codec's.)
         vals = jax.lax.optimization_barrier(vals.astype(jnp.bfloat16))
     all_vals = jax.lax.all_gather(vals, "pod")  # [npod, C, k]
-    if quantize:
+    if wire == "bf16":
         all_vals = jax.lax.optimization_barrier(all_vals)
     all_idx = jax.lax.all_gather(idx, "pod")
     delta = (
@@ -222,8 +240,8 @@ def _flat_shard_sync(params, w_ref, eps, e, *, hfl_cfg, quantize):
     # --- MBS side: discounted error + whole-vector top-k downlink ---
     delta = delta + hfl_cfg.beta_m * e_v
     dvals, didx = sp.pack_phi(delta, hfl_cfg.phi_mbs_dl, impl=impl)
-    if quantize:
-        dvals = _qround(dvals)
+    if wire:
+        dvals = _wire_round(dvals, wire)
     d = sp.unpack_topk(dvals, didx, Q)
     new_e = delta - d
     new_wref = wref + d
@@ -241,7 +259,7 @@ def _flat_shard_sync(params, w_ref, eps, e, *, hfl_cfg, quantize):
 # ---- leaf layout: legacy per-tensor Ω, kept as the reference path ---------
 
 
-def _leaf_sync_sparse(wn, wref, eps, e, *, hfl_cfg, axis, quantize):
+def _leaf_sync_sparse(wn, wref, eps, e, *, hfl_cfg, axis, wire):
     """Local-shard sync for ONE leaf. wn/eps [1, *loc]; wref/e [*loc]."""
     N = hfl_cfg.num_clusters
     shape = wref.shape
@@ -255,17 +273,17 @@ def _leaf_sync_sparse(wn, wref, eps, e, *, hfl_cfg, axis, quantize):
     s = (wn0 - wref_f) + hfl_cfg.beta_s * eps_f
     k_ul = sp.keep_count(size, hfl_cfg.phi_sbs_ul)
     vals, idx = sp.pack_topk(s, k_ul)
-    if quantize:
-        vals = _qround(vals)  # residual must buffer the bf16 error too
+    if wire:
+        vals = _wire_round(vals, wire)  # residual buffers the wire error too
     sent = sp.unpack_topk(vals, idx, size)
     new_eps = s - sent
 
     # --- cross-pod exchange: 2k values per hop instead of Q ---
-    if quantize:
+    if wire == "bf16":
         vals = jax.lax.optimization_barrier(vals.astype(jnp.bfloat16))
     if axis is not None:
         all_vals = jax.lax.all_gather(vals, axis)  # [N, k]
-        if quantize:
+        if wire == "bf16":
             all_vals = jax.lax.optimization_barrier(all_vals)
         all_idx = jax.lax.all_gather(idx, axis)
         delta = (
@@ -281,8 +299,8 @@ def _leaf_sync_sparse(wn, wref, eps, e, *, hfl_cfg, axis, quantize):
     delta = delta + hfl_cfg.beta_m * e_f
     k_dl = sp.keep_count(size, hfl_cfg.phi_mbs_dl)
     dvals, didx = sp.pack_topk(delta, k_dl)
-    if quantize:
-        dvals = _qround(dvals)
+    if wire:
+        dvals = _wire_round(dvals, wire)
     d = sp.unpack_topk(dvals, didx, size)
     new_e = delta - d
     new_wref = wref_f + d
@@ -297,7 +315,7 @@ def _leaf_sync_sparse(wn, wref, eps, e, *, hfl_cfg, axis, quantize):
     )
 
 
-def _make_leaf_local_sync(hfl_cfg, quantize):
+def _make_leaf_local_sync(hfl_cfg, wire):
     """Single-process per-leaf sync (mesh=None): legacy reference path."""
 
     def local_sync(state: HFLState):
@@ -312,16 +330,16 @@ def _make_leaf_local_sync(hfl_cfg, quantize):
                     + hfl_cfg.beta_s * eps[n].reshape(-1)
                 k_ul = sp.keep_count(size, hfl_cfg.phi_sbs_ul)
                 vals, idx = sp.pack_topk(s, k_ul)
-                if quantize:
-                    vals = _qround(vals)
+                if wire:
+                    vals = _wire_round(vals, wire)
                 sent = sp.unpack_topk(vals, idx, size)
                 outs_eps.append(s - sent)
                 sents.append(sent)
             delta = sum(sents) / N + hfl_cfg.beta_m * e.reshape(-1)
             k_dl = sp.keep_count(size, hfl_cfg.phi_mbs_dl)
             dvals, didx = sp.pack_topk(delta, k_dl)
-            if quantize:
-                dvals = _qround(dvals)
+            if wire:
+                dvals = _wire_round(dvals, wire)
             d = sp.unpack_topk(dvals, didx, size)
             new_e = delta - d
             new_wref = wref_f + d
@@ -344,6 +362,14 @@ def _make_leaf_local_sync(hfl_cfg, quantize):
 
 
 # ---- builder --------------------------------------------------------------
+
+
+def wire_format_of(hfl_cfg) -> "str | None":
+    """Wire value rounding of a config: ``None`` for exact-f32 modes, the
+    configured ``wire_format`` (bf16 | q8) under ``quantized_sparse``."""
+    if hfl_cfg.sync_mode != "quantized_sparse":
+        return None
+    return getattr(hfl_cfg, "wire_format", "bf16")
 
 
 def jit_sync_step(sync_step):
@@ -392,7 +418,7 @@ def make_sync_step(hfl_cfg, mesh=None, param_specs=None, *, layout=None):
 
         return dense_sync
 
-    quantize = mode == "quantized_sparse"
+    wire = wire_format_of(hfl_cfg)
     if mode not in ("sparse", "quantized_sparse"):
         raise ValueError(mode)
     layout = layout or getattr(hfl_cfg, "sync_layout", "flat")
@@ -405,8 +431,8 @@ def make_sync_step(hfl_cfg, mesh=None, param_specs=None, *, layout=None):
         # Single-pod / CPU path: emulate the cluster axis locally. The
         # protocol still follows Alg.5 exactly; the "exchange" is a local sum.
         if layout == "flat":
-            return _make_flat_local_sync(hfl_cfg, quantize)
-        return _make_leaf_local_sync(hfl_cfg, quantize)
+            return _make_flat_local_sync(hfl_cfg, wire)
+        return _make_leaf_local_sync(hfl_cfg, wire)
 
     # --- multi-pod: fully-manual shard_map, per-shard top-k, pod all-gather ---
     assert param_specs is not None, "sparse sync on a pod mesh needs param_specs"
@@ -427,12 +453,12 @@ def make_sync_step(hfl_cfg, mesh=None, param_specs=None, *, layout=None):
     out_specs = in_specs
 
     if layout == "flat":
-        _sync_all = partial(_flat_shard_sync, hfl_cfg=hfl_cfg, quantize=quantize)
+        _sync_all = partial(_flat_shard_sync, hfl_cfg=hfl_cfg, wire=wire)
     else:
 
         def _sync_all(params, w_ref, eps, e):
             outs = jax.tree.map(
-                partial(_leaf_sync_sparse, hfl_cfg=hfl_cfg, axis="pod", quantize=quantize),
+                partial(_leaf_sync_sparse, hfl_cfg=hfl_cfg, axis="pod", wire=wire),
                 params, w_ref, eps, e,
             )
             is_t = lambda t: isinstance(t, tuple)

@@ -12,22 +12,33 @@ import numpy as np
 
 class FederatedBatcher:
     def __init__(self, arrays, shards, batch_size: int, seed: int = 0):
-        """arrays: tuple of np arrays sharing axis 0; shards: list of K index sets."""
+        """arrays: tuple of np arrays sharing axis 0; shards: list of K index sets.
+
+        Empty shards are legal: extreme non-IID splits
+        (``partition_dirichlet`` with small α) can starve an MU of data
+        entirely. Such an MU resamples from the GLOBAL pool each batch
+        (``rng.choice`` on a zero-length shard would raise), which keeps
+        the cluster layout intact without inventing a new partition.
+        """
         self.arrays = arrays
-        self.shards = shards
+        self.shards = [np.asarray(s, dtype=np.intp).reshape(-1) for s in shards]
         self.bs = batch_size
         self.rng = np.random.default_rng(seed)
+        self._n = len(arrays[0])
 
     def __iter__(self):
         return self
 
+    def _draw(self, s: np.ndarray) -> np.ndarray:
+        if len(s) == 0:
+            return self.rng.choice(self._n, self.bs, replace=self._n < self.bs)
+        return self.rng.choice(s, self.bs, replace=len(s) < self.bs)
+
     def __next__(self):
-        outs = []
-        for arr in self.arrays:
-            batch = np.stack(
-                [arr[self.rng.choice(s, self.bs, replace=len(s) < self.bs)] for s in self.shards]
-            )
-            outs.append(batch)  # [K, bs, ...]
+        # one index draw per shard, shared by every array: paired arrays
+        # (e.g. images + labels) must see the SAME rows
+        idx = [self._draw(s) for s in self.shards]
+        outs = [np.stack([arr[i] for i in idx]) for arr in self.arrays]  # [K, bs, ...]
         return tuple(outs) if len(outs) > 1 else outs[0]
 
 

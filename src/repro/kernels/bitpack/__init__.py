@@ -1,0 +1,4 @@
+"""Pallas bit-pack/compaction kernels for the bitmap payload codec."""
+from repro.kernels.bitpack.ops import bitmap_payload, bitpack_bytes
+
+__all__ = ["bitmap_payload", "bitpack_bytes"]

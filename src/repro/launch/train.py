@@ -71,6 +71,21 @@ def main(argv=None):
                     help="flat = whole-model Ω (paper-exact, one fused "
                          "top-k/collective per sync); leaf = legacy per-leaf "
                          "reference path")
+    ap.add_argument("--payload-accounting", default="analytic",
+                    choices=["analytic", "measured"],
+                    help="analytic = the paper's Q·(1-φ)·bits/param; "
+                         "measured = byte-accurate codec streams of the "
+                         "real sync payloads (repro.comm), priced into the "
+                         "simulator's virtual clock")
+    ap.add_argument("--codec", default="delta-varint",
+                    help="payload codec for measured accounting "
+                         "(repro.comm.codecs registry: dense-f32, "
+                         "dense-bf16, bitmap, delta-varint, delta-gamma, "
+                         "*-q8, best)")
+    ap.add_argument("--wire-format", default="bf16", choices=["bf16", "q8"],
+                    help="wire value rounding under --sync "
+                         "quantized_sparse (error feeds back through the "
+                         "eps/e buffers)")
     ap.add_argument("--batch-per-mu", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=0.25)
@@ -109,6 +124,8 @@ def main(argv=None):
         num_clusters=args.clusters, mus_per_cluster=args.mus, period=args.period,
         sync_mode=args.sync, omega_impl=args.omega_impl,
         sync_layout=args.sync_layout,
+        payload_accounting=args.payload_accounting, codec=args.codec,
+        wire_format=args.wire_format,
     )
     if scenario is not None:
         from repro.sim.scenarios import apply_hfl_overrides
@@ -165,6 +182,13 @@ def main(argv=None):
               f"virtual-wallclock={trace.wallclock:.3f}s "
               f"syncs={m['sync_launches']} "
               f"fronthaul={m['bits_fronthaul_total']/8e6:.2f}MB")
+        if m.get("payload_accounting") == "measured":
+            bpp = m.get("bits_per_param_mean")
+            print(f"[sim] measured payloads: codec={m['codec']} "
+                  f"Q={m['payload_size']} "
+                  f"sbs_ul={m['bits_sbs_ul']/8e6:.3f}MB "
+                  f"mbs_dl={m['bits_mbs_dl']/8e6:.3f}MB "
+                  + (f"bits/param={bpp:.3f}" if bpp is not None else ""))
         if m.get("wireless"):
             print(f"[sim] t_fl_iter={m['t_fl_iter_s']:.3f}s "
                   f"t_hfl_iter={m['t_hfl_iter_s']:.3f}s "

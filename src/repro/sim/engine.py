@@ -29,10 +29,20 @@ Three sync disciplines:
     (``async_weight``), trading consensus freshness for zero straggler
     stalls.
 
+Payload accounting (``HFLConfig.payload_accounting``): ``analytic`` prices
+every transfer with the paper's idealized ``Q·(1-φ)·bits_per_param``;
+``measured`` prices with byte-accurate codec streams (``repro.comm``) —
+the REAL ``(values, indices)`` fronthaul payloads are measured per sync
+event (a jitted probe re-runs the sync's Ω selection on the same state),
+the per-iteration access links with the codec on synthetic exact-k
+payloads, and a per-link ``PayloadLedger`` lands in the trace meta.
+
 Modelling simplifications (documented, not hidden): data residency is
 static — MU k always trains in cluster ``k // mus_per_cluster`` — while
 *radio* association follows mobility; the async downlink applies the fresh
-reference densely (its sparse payload is charged in the time model only);
+reference densely unless ``HFLConfig.async_dl_sparse`` enables the
+per-cluster-error sparse downlink; async event *times* are scheduled from
+the static measured estimates (payloads are only known at the event);
 and the vmapped train step computes all clusters even when async advances
 only one (the price of reusing the real fused program).
 """
@@ -97,50 +107,112 @@ def async_weight(staleness: int, num_clusters: int, exp: float = 1.0) -> float:
     return (1.0 / num_clusters) * (1.0 + float(staleness)) ** (-float(exp))
 
 
-def make_async_sync_step(hfl_cfg: HFLConfig) -> Callable:
-    """Per-cluster staleness-weighted sparse sync: (state, n, weight) -> state.
+def make_async_sync_step(
+    hfl_cfg: HFLConfig, *, dl_sparse: bool = False, codec=None
+) -> Callable:
+    """Per-cluster staleness-weighted sparse sync.
 
     The uplink is the paper's Ω (whole-model top-(1-φ) of the drift, with
-    the SBS error buffer, bf16-rounded under ``quantized_sparse``); the MBS
-    applies ``weight * sent`` instead of the lockstep ``mean``; the cluster
-    then adopts the fresh reference.
+    the SBS error buffer, wire-rounded under ``quantized_sparse``); the MBS
+    applies ``weight * sent`` instead of the lockstep ``mean``.
+
+    Downlink, two flavours:
+
+      * dense (``dl_sparse=False``, historical): the cluster adopts the
+        fresh reference verbatim — ``(state, n, weight) -> state``.
+      * sparse (``dl_sparse=True``): the MBS sends Ω of what the cluster
+        is missing (``φ_mbs_dl``), buffered by a PER-CLUSTER downlink
+        error ``e_dl [N, Q]`` (``β_m``-discounted, mirroring the global
+        ``e`` of the lockstep consensus) that the caller threads through:
+        ``(state, e_dl, n, weight) -> (state, e_dl)``. Build the initial
+        buffer with ``init_dl_error``.
+
+    With ``codec`` set (a ``repro.comm.codecs`` codec or name), each call
+    additionally returns a dict of traced measured-bit counts for the
+    payloads actually sent: ``{"sbs_ul": ...}`` plus ``"mbs_dl"`` when the
+    downlink is sparse (the dense adoption's bits are static in Q — the
+    engine charges them from ``comm.accounting.access_bits``).
     """
     from repro.core import sparsify as sp
+    from repro.core.hfl import _wire_round, wire_format_of
     from repro.utils import flatten as fl
 
-    impl = hfl_cfg.omega_impl
-    quantize = hfl_cfg.sync_mode == "quantized_sparse"
+    if isinstance(codec, str):
+        from repro.comm.codecs import get_codec
 
-    @partial(jax.jit, donate_argnums=0)
-    def async_sync(state, n, weight):
+        codec = get_codec(codec)
+    impl = hfl_cfg.omega_impl
+    wire = wire_format_of(hfl_cfg)
+
+    def _core(state, e_dl, n, weight):
         wref, ref_spec = fl.pack(state.w_ref)
         wn_all, p_spec = fl.pack_stacked(state.params)
         eps_all, eps_spec = fl.pack_stacked(state.eps)
         Q = ref_spec.total
+        bits = {}
 
         # --- uplink (Alg.5 l.24-27 for ONE cluster) ---
         s = wn_all[n] - wref + hfl_cfg.beta_s * eps_all[n]
         vals, idx = sp.pack_phi(s, hfl_cfg.phi_sbs_ul, impl=impl)
-        if quantize:
-            # the residual buffers the bf16 wire error too (receivers only
+        if wire:
+            # the residual buffers the wire error too (receivers only
             # ever see the rounded value), matching the lockstep paths
-            vals = vals.astype(jnp.bfloat16).astype(jnp.float32)
+            vals = _wire_round(vals, wire)
+        if codec is not None:
+            bits["sbs_ul"] = codec.measure_bits_jax(vals, idx, Q)
         sent = sp.unpack_topk(vals, idx, Q)
         new_eps_n = s - sent
 
         # --- MBS: staleness-weighted application ---
         new_wref = wref + weight * sent
 
-        # --- downlink: cluster adopts the fresh reference ---
-        new_wn = wn_all.at[n].set(new_wref)
+        # --- downlink ---
+        if dl_sparse:
+            diff = new_wref - wn_all[n] + hfl_cfg.beta_m * e_dl[n]
+            dvals, didx = sp.pack_phi(diff, hfl_cfg.phi_mbs_dl, impl=impl)
+            if wire:
+                dvals = _wire_round(dvals, wire)
+            if codec is not None:
+                bits["mbs_dl"] = codec.measure_bits_jax(dvals, didx, Q)
+            recv = sp.unpack_topk(dvals, didx, Q)
+            new_row = wn_all[n] + recv
+            e_dl = e_dl.at[n].set(diff - recv)
+        else:
+            new_row = new_wref  # dense adoption of the fresh reference
+
+        new_wn = wn_all.at[n].set(new_row)
         new_eps = eps_all.at[n].set(new_eps_n)
-        return state._replace(
+        state = state._replace(
             params=fl.unpack_stacked(new_wn, p_spec),
             w_ref=fl.unpack(new_wref, ref_spec),
             eps=fl.unpack_stacked(new_eps, eps_spec),
         )
+        return state, e_dl, bits
+
+    if dl_sparse:
+
+        @partial(jax.jit, donate_argnums=(0, 1))
+        def async_sync_dl(state, e_dl, n, weight):
+            state, e_dl, bits = _core(state, e_dl, n, weight)
+            return (state, e_dl, bits) if codec is not None else (state, e_dl)
+
+        return async_sync_dl
+
+    @partial(jax.jit, donate_argnums=0)
+    def async_sync(state, n, weight):
+        state, _, bits = _core(state, None, n, weight)
+        return (state, bits) if codec is not None else state
 
     return async_sync
+
+
+def init_dl_error(state, hfl_cfg: HFLConfig):
+    """Zero per-cluster downlink error buffer [N, Q] for the sparse-DL
+    async sync (flat layout, same offsets as the packed ``w_ref``)."""
+    from repro.utils import flatten as fl
+
+    Q = fl.spec_of(state.w_ref).total
+    return jnp.zeros((hfl_cfg.num_clusters, Q), jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -216,6 +288,29 @@ class SimEngine:
         self._sync_launches = 0
         self._bits_access = 0.0
         self._bits_fronthaul = 0.0
+        # measured-bits accounting (repro.comm): byte-accurate codec streams
+        # replace the analytic Q·(1-φ)·bits_per_param in both event pricing
+        # and the trace's byte totals. Ledger/probe are sized to the REAL
+        # flat model length at run() (the analytic lp.model_params may
+        # describe a different architecture than the one being trained).
+        self._acc = getattr(hfl_cfg, "payload_accounting", "analytic") \
+            if hfl_cfg is not None else "analytic"
+        if self._acc not in ("analytic", "measured"):
+            raise ValueError(f"unknown payload_accounting {self._acc!r}")
+        self._codec = None
+        self.ledger = None
+        self._probe = None
+        self._ab = None  # static per-link access bits (synthetic payloads)
+        if self._acc == "measured":
+            if not self.wireless:
+                raise ValueError("payload_accounting='measured' needs the "
+                                 "wireless model (topo/fleet/lp)")
+            from repro.comm.codecs import get_codec
+
+            self._codec = get_codec(self.hfl.codec)
+            from repro.comm.accounting import warn_index_bits_deprecated
+
+            warn_index_bits_deprecated(self.lp)
 
     # --- public entry ----------------------------------------------------
 
@@ -244,6 +339,7 @@ class SimEngine:
         self._sync_launches = 0
         self._bits_access = 0.0
         self._bits_fronthaul = 0.0
+        self._setup_measured(state)
         disc = self.sim.discipline
         if disc in ("lockstep", "deadline"):
             return self._run_lockstep(
@@ -256,6 +352,54 @@ class SimEngine:
 
     # --- wireless plumbing -----------------------------------------------
 
+    def _setup_measured(self, state) -> None:
+        """Size the ledger/probe to the run's real flat model length."""
+        if self._acc != "measured":
+            return
+        from repro.comm import accounting as acct
+        from repro.core.hfl import wire_format_of
+        from repro.utils import flatten as fl
+
+        if self.hfl.sync_mode != "dense" \
+                and getattr(self.hfl, "sync_layout", "flat") != "flat":
+            # the probe mirrors the flat whole-model sync; leaf payloads
+            # have per-leaf keep_count rounding and leaf-local index
+            # statistics, so measuring the flat payloads would report bits
+            # that were never transmitted
+            raise ValueError(
+                "payload_accounting='measured' requires sync_layout='flat' "
+                "(the probe measures the whole-model payloads)")
+        wire = wire_format_of(self.hfl) or "f32"
+        vf = getattr(self._codec, "value_format", None)
+        if vf is not None and vf != "mixed" and vf != wire:
+            import warnings
+
+            warnings.warn(
+                f"codec {self._codec.name!r} carries {vf} values but the "
+                f"sync's wire format is {wire}: measured bits price a "
+                f"fidelity the simulation does not exchange", stacklevel=2)
+        Q = fl.spec_of(state.w_ref).total
+        self.ledger = acct.PayloadLedger(codec=self._codec.name, size=Q)
+        self._probe = acct.make_sync_probe(self.hfl, self._codec)
+        self._ab = {
+            "mu_ul": acct.access_bits(self._codec, Q, self.hfl.phi_mu_ul),
+            "sbs_dl": acct.access_bits(self._codec, Q, self.hfl.phi_sbs_dl),
+            "sbs_ul": acct.access_bits(self._codec, Q, self.hfl.phi_sbs_ul),
+            "mbs_dl": acct.access_bits(self._codec, Q, self.hfl.phi_mbs_dl),
+            # the async dense adoption ships the raw reference: price it as
+            # dense-f32 regardless of the (sparse) codec in use
+            "dense": acct.access_bits("dense-f32", Q, 0.0),
+        }
+        self._aux = None  # re-price the radio with measured payloads
+
+    def _payload_overrides(self):
+        """Static measured per-link bits for the analytic-formula slots
+        (the per-event fronthaul θ is re-priced from ACTUAL probe bits)."""
+        if self.ledger is None:
+            return None
+        return {k: float(self._ab[k])
+                for k in ("mu_ul", "sbs_dl", "sbs_ul", "mbs_dl")}
+
     def _latency_aux(self) -> dict:
         if self._aux is None:
             _, self._aux = hfl_latency(
@@ -264,6 +408,7 @@ class SimEngine:
                 phi_mu_ul=self.hfl.phi_mu_ul, phi_sbs_dl=self.hfl.phi_sbs_dl,
                 phi_sbs_ul=self.hfl.phi_sbs_ul, phi_mbs_dl=self.hfl.phi_mbs_dl,
                 reuse=self.sim.reuse,
+                payload_bits=self._payload_overrides(),
             )
         return self._aux
 
@@ -273,20 +418,28 @@ class SimEngine:
             "discipline": self.sim.discipline,
             "seed": self.sim.seed,
             "period": self.period,
+            "payload_accounting": self._acc,
         }
+        if self.ledger is not None:
+            meta["codec"] = self.ledger.codec
+            meta["payload_size"] = self.ledger.size
         if not self.wireless:
             meta["wireless"] = False
             return meta
         comp_max = float(self.fleet.compute_times(self.sim.base_compute_s).max())
+        pb = self._payload_overrides()
         t_fl, _ = fl_latency(
             self.topo, self.fleet.pos, self.lp,
             phi_ul=self.hfl.phi_mu_ul, phi_dl=self.hfl.phi_mbs_dl,
+            ul_bits=None if pb is None else pb["mu_ul"],
+            dl_bits=None if pb is None else pb["mbs_dl"],
         )
         per_iter, aux = hfl_latency(
             self.topo, self.fleet.pos, self.fleet.cid, self.lp, H=self.period,
             phi_mu_ul=self.hfl.phi_mu_ul, phi_sbs_dl=self.hfl.phi_sbs_dl,
             phi_sbs_ul=self.hfl.phi_sbs_ul, phi_mbs_dl=self.hfl.phi_mbs_dl,
             reuse=self.sim.reuse,
+            payload_bits=pb,
         )
         self._aux = aux
         meta.update(
@@ -308,7 +461,8 @@ class SimEngine:
         comp = self.fleet.compute_times(self.sim.base_compute_s)
         avail = self.fleet.draw_available()
         K, N = self.fleet.K, hfl.num_clusters
-        ul_pay = lp.payload(hfl.phi_mu_ul)
+        ul_pay = (float(self._ab["mu_ul"]) if self.ledger is not None
+                  else lp.payload(hfl.phi_mu_ul))
 
         # per-MU round time: H iterations of own compute + own UL + cluster DL
         r = np.full(K, np.inf)
@@ -387,9 +541,19 @@ class SimEngine:
 
     def _count_train(self, participants: Optional[int], clusters: int) -> None:
         self._train_launches += 1
-        if self.wireless:
+        if not self.wireless:
+            return
+        p = self.fleet.K if participants is None else participants
+        if self.ledger is not None:
+            # access links are never materialized by the fused train step:
+            # measured mode charges the codec on synthetic exact-k payloads
+            ul = self.ledger.record("mu_ul", p * self._ab["mu_ul"], events=p)
+            dl = self.ledger.record(
+                "sbs_dl", clusters * self._ab["sbs_dl"], events=clusters
+            )
+            self._bits_access += ul + dl
+        else:
             lp, hfl = self.lp, self.hfl
-            p = self.fleet.K if participants is None else participants
             self._bits_access += (
                 p * lp.payload(hfl.phi_mu_ul) + clusters * lp.payload(hfl.phi_sbs_dl)
             )
@@ -402,13 +566,25 @@ class SimEngine:
                 clusters * lp.payload(hfl.phi_sbs_ul) + lp.payload(hfl.phi_mbs_dl)
             )
 
+    def _count_sync_measured(self, ul_bits, dl_bits: float) -> None:
+        """Record the REAL fronthaul payload bits of one sync event."""
+        self._sync_launches += 1
+        ul_bits = np.atleast_1d(np.asarray(ul_bits, np.float64))
+        ul = self.ledger.record("sbs_ul", float(ul_bits.sum()),
+                                events=len(ul_bits))
+        dl = self.ledger.record("mbs_dl", float(dl_bits))
+        self._bits_fronthaul += ul + dl
+
     def _totals(self) -> dict:
-        return {
+        out = {
             "train_launches": self._train_launches,
             "sync_launches": self._sync_launches,
             "bits_access_total": self._bits_access,
             "bits_fronthaul_total": self._bits_fronthaul,
         }
+        if self.ledger is not None:
+            out.update(self.ledger.summary())
+        return out
 
     # --- lockstep / deadline ---------------------------------------------
 
@@ -437,16 +613,34 @@ class SimEngine:
                 trace.add(kind="train", t=t, step=step,
                           loss=float(jnp.mean(loss)), dropped=ctx["dropped"])
             if (step + 1) % H == 0:
+                sync_s = ctx["sync_s"]
+                row_extra = {}
+                if self.ledger is not None:
+                    # measure the REAL fronthaul payloads this sync sends
+                    # (before the donating sync step consumes the state)
+                    # and re-price θ^U/θ^D from the actual bit counts
+                    ul_b, dl_b = self._probe(state)
+                    ul_b, dl_b = np.asarray(ul_b, np.float64), float(dl_b)
+                    self._count_sync_measured(ul_b, dl_b)
+                    aux = self._latency_aux()
+                    sync_s = float(
+                        (ul_b.max() + dl_b) / aux["fh_rate"]
+                        + aux["gamma_dl"].max()
+                    )
+                    row_extra = {"bits_sbs_ul": float(ul_b.sum()),
+                                 "bits_mbs_dl": dl_b}
+                else:
+                    self._count_sync(N if N is not None else 1)
                 state = sync_step(state)
-                t += ctx["sync_s"]
-                self._count_sync(N if N is not None else 1)
+                t += sync_s
                 if self._record:
                     trace.add(kind="sync", t=t, step=step,
                               dropped=ctx["dropped"],
                               deadline_s=ctx["deadline_s"],
-                              iter_s=ctx["iter_s"], sync_s=ctx["sync_s"])
+                              iter_s=ctx["iter_s"], sync_s=sync_s,
+                              **row_extra)
                 if self.fleet is not None and self.fleet.speed_mps > 0:
-                    self.fleet.advance(H * ctx["iter_s"] + ctx["sync_s"])
+                    self.fleet.advance(H * ctx["iter_s"] + sync_s)
                     self.fleet.reassociate()
                     self._aux = None  # positions changed: re-price the radio
             if on_step is not None:
@@ -479,7 +673,13 @@ class SimEngine:
             return state, trace
         it = iter(batches)
         q = EventQueue()
-        sync_n = make_async_sync_step(hfl)
+        dl_sparse = bool(getattr(hfl, "async_dl_sparse", False))
+        measured = self.ledger is not None
+        sync_n = make_async_sync_step(
+            hfl, dl_sparse=dl_sparse,
+            codec=self._codec if measured else None,
+        )
+        e_dl = init_dl_error(state, hfl) if dl_sparse else None
         comp = (
             self.fleet.compute_times(self.sim.base_compute_s)
             if self.fleet is not None else None
@@ -540,10 +740,25 @@ class SimEngine:
                 self._count_train(max(members - dropped, 0), 1)
             staleness = global_updates - last_pull[n]
             w = async_weight(staleness, N, self.sim.staleness_exp)
-            state = sync_n(state, jnp.int32(n), jnp.float32(w))
+            nj, wj = jnp.int32(n), jnp.float32(w)
+            bits = None
+            if dl_sparse and measured:
+                state, e_dl, bits = sync_n(state, e_dl, nj, wj)
+            elif dl_sparse:
+                state, e_dl = sync_n(state, e_dl, nj, wj)
+            elif measured:
+                state, bits = sync_n(state, nj, wj)
+            else:
+                state = sync_n(state, nj, wj)
             global_updates += 1
             last_pull[n] = global_updates
-            self._count_sync(1)
+            if measured:
+                # dense adoption pulls the whole reference: static Q bits
+                dl_b = (float(bits["mbs_dl"]) if dl_sparse
+                        else float(self._ab["dense"]))
+                self._count_sync_measured([float(bits["sbs_ul"])], dl_b)
+            else:
+                self._count_sync(1)
             if self._record:
                 trace.add(kind="sync", t=t, step=steps_done - 1,
                           cluster=int(n), round=int(ev.round),

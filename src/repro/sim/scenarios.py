@@ -80,8 +80,10 @@ SCENARIOS = {
     "async": Scenario(
         name="async", kind="train",
         sim=SimConfig(scenario="async", discipline="async", compute_sigma=0.5),
-        hfl=dict(sync_mode="sparse", **PAPER_PHIS),
-        note="per-cluster clocks, staleness-weighted consensus",
+        # sparse downlink with per-cluster DL error buffers: each cluster
+        # pulls only the top-(1-φ_mbs_dl) of what it is missing
+        hfl=dict(sync_mode="sparse", async_dl_sparse=True, **PAPER_PHIS),
+        note="per-cluster clocks, staleness-weighted consensus, sparse DL",
     ),
     "scale-100k": Scenario(
         name="scale-100k", kind="sampling",

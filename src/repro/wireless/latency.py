@@ -4,6 +4,11 @@ Composes the sub-carrier allocator (Alg. 2), the M-QAM UL rate model, and the
 rateless broadcast DL model over the HCN topology. Sparsification scales the
 payload by (1-φ); ``index_bits`` > 0 additionally charges per-entry index
 overhead (the paper charges none — keep 0 to reproduce its figures).
+
+Both latency entry points also accept *explicit* per-link bit counts, which
+take precedence over the analytic ``payload(φ)``: the measured-bits path
+(``repro.comm``) prices events with the byte-accurate codec streams of the
+real sync payloads instead of the idealized formula.
 """
 from __future__ import annotations
 
@@ -29,7 +34,11 @@ class LatencyParams:
     model_params: float = 11.2e6  # Q (ResNet18)
     bits_per_param: float = 32.0  # Q̂
     fronthaul_gain: float = 100.0  # SBS<->MBS vs access links
-    index_bits: float = 0.0  # per transmitted entry (0 = paper's accounting)
+    # DEPRECATED: per transmitted entry (0 = paper's accounting). The
+    # measured path (payload_accounting="measured") counts the real index
+    # streams byte-accurately; a nonzero value there double-charges them
+    # (repro.comm.accounting warns). Kept at 0 for figure reproduction.
+    index_bits: float = 0.0
 
     @property
     def n0(self) -> float:
@@ -40,14 +49,23 @@ class LatencyParams:
         return self.model_params * frac * (self.bits_per_param + self.index_bits * (phi > 0))
 
 
-def fl_latency(topo: HCNTopology, mu_pos, lp: LatencyParams, *, phi_ul=0.0, phi_dl=0.0):
-    """Per-iteration FL latency T^FL = T^UL + T^DL (MUs <-> MBS directly)."""
+def fl_latency(
+    topo: HCNTopology, mu_pos, lp: LatencyParams, *,
+    phi_ul=0.0, phi_dl=0.0, ul_bits=None, dl_bits=None,
+):
+    """Per-iteration FL latency T^FL = T^UL + T^DL (MUs <-> MBS directly).
+
+    ``ul_bits``/``dl_bits``: explicit payload bit counts (e.g. measured
+    codec streams) overriding the analytic ``lp.payload(φ)``.
+    """
     d = topo.dist_to_mbs(mu_pos)
     kw = dict(B0=lp.B0, Pmax=lp.p_mu, N0=lp.n0, alpha=lp.alpha, ber=lp.ber)
     _, rates = allocate_subcarriers(d, lp.M, **kw)
-    t_ul = lp.payload(phi_ul) / rates.min()
+    ul_bits = lp.payload(phi_ul) if ul_bits is None else ul_bits
+    dl_bits = lp.payload(phi_dl) if dl_bits is None else dl_bits
+    t_ul = ul_bits / rates.min()
     t_dl = broadcast_latency(
-        d, lp.payload(phi_dl), M=lp.M, B0=lp.B0, Pmax=lp.p_mbs, N0=lp.n0, alpha=lp.alpha
+        d, dl_bits, M=lp.M, B0=lp.B0, Pmax=lp.p_mbs, N0=lp.n0, alpha=lp.alpha
     )
     return t_ul + t_dl, {"t_ul": t_ul, "t_dl": t_dl}
 
@@ -64,8 +82,19 @@ def hfl_latency(
     phi_sbs_ul=0.0,
     phi_mbs_dl=0.0,
     reuse: int = 1,
+    payload_bits=None,
 ):
-    """Average per-iteration HFL latency Γ^HFL = Γ^period / H (paper eq. 21)."""
+    """Average per-iteration HFL latency Γ^HFL = Γ^period / H (paper eq. 21).
+
+    ``payload_bits``: optional dict overriding the analytic per-link
+    payloads with explicit bit counts (keys among ``mu_ul``, ``sbs_dl``,
+    ``sbs_ul``, ``mbs_dl`` — the measured-accounting hook).
+    """
+    pb = payload_bits or {}
+    bits_mu_ul = pb.get("mu_ul", lp.payload(phi_mu_ul))
+    bits_sbs_dl = pb.get("sbs_dl", lp.payload(phi_sbs_dl))
+    bits_sbs_ul = pb.get("sbs_ul", lp.payload(phi_sbs_ul))
+    bits_mbs_dl = pb.get("mbs_dl", lp.payload(phi_mbs_dl))
     colors, n_colors = topo.coloring(reuse)
     m_cluster = lp.M // n_colors  # sub-carriers available inside one cluster
     kw = dict(B0=lp.B0, Pmax=lp.p_mu, N0=lp.n0, alpha=lp.alpha, ber=lp.ber)
@@ -82,11 +111,11 @@ def hfl_latency(
         d = topo.dist_to_sbs(mu_pos[sel], cid[sel])
         _, rates = allocate_subcarriers(d, m_cluster, **kw)
         mu_rates.append(rates)
-        gamma_ul.append(lp.payload(phi_mu_ul) / rates.min())
+        gamma_ul.append(bits_mu_ul / rates.min())
         mean_ul.append(rates.mean())
         gamma_dl.append(
             broadcast_latency(
-                d, lp.payload(phi_sbs_dl), M=m_cluster, B0=lp.B0, Pmax=lp.p_sbs,
+                d, bits_sbs_dl, M=m_cluster, B0=lp.B0, Pmax=lp.p_sbs,
                 N0=lp.n0, alpha=lp.alpha,
             )
         )
@@ -94,8 +123,8 @@ def hfl_latency(
 
     # fronthaul (SBS <-> MBS): paper assumes 100x the access-link rate
     fh_rate = lp.fronthaul_gain * float(np.mean(mean_ul)) if mean_ul else np.inf
-    theta_u = lp.payload(phi_sbs_ul) / fh_rate
-    theta_d = lp.payload(phi_mbs_dl) / fh_rate
+    theta_u = bits_sbs_ul / fh_rate
+    theta_d = bits_mbs_dl / fh_rate
 
     per_cluster = H * (gamma_ul + gamma_dl)
     gamma_period = per_cluster.max() + theta_u + theta_d + gamma_dl.max()
@@ -103,6 +132,9 @@ def hfl_latency(
     return per_iter, {
         "gamma_ul": gamma_ul, "gamma_dl": gamma_dl,
         "theta_u": theta_u, "theta_d": theta_d,
+        # fronthaul rate so callers can re-price θ from per-event measured
+        # bit counts without re-running the allocator
+        "fh_rate": fh_rate,
         # per-cluster per-MU UL rates (the simulator's deadline discipline
         # charges each MU its own UL time, not just the cluster min)
         "mu_rates": mu_rates, "m_cluster": m_cluster,
