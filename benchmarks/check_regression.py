@@ -1,0 +1,184 @@
+"""CI bench-regression gate: fresh BENCH_*.json vs committed baselines.
+
+The simulator's perf surface is *deterministic* — virtual wall-clock is
+computed from the wireless model, measured bits from byte-exact codec
+streams — so freshly generated ``benchmarks/artifacts/BENCH_{sim,comm,
+trace}.json`` can be diffed against committed ``benchmarks/baselines/``
+snapshots without host-speed noise. This script walks both JSON trees and
+fails (exit 1) when any *gated* metric regressed by more than the
+tolerance (default 25%).
+
+Gated metrics are the deterministic smaller-is-better ones: virtual
+wall-clock / latency seconds, measured bits per param, total bits on a
+link class, and the masked-step FLOP ratio. Host-dependent numbers
+(encode throughput) and larger-is-better rates are never gated.
+
+A gated baseline key MISSING from the fresh artifact also fails — silently
+dropping a metric is how perf surfaces rot. After an intentional change
+(new scenario pricing, codec improvements, schema change), regenerate and
+bless the new numbers:
+
+  PYTHONPATH=src python -m benchmarks.run --only sim,comm,trace
+  python -m benchmarks.check_regression --update
+
+  # gate (what CI runs after regenerating the artifacts):
+  python -m benchmarks.check_regression
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import shutil
+import sys
+
+ARTIFACT_DIR = "benchmarks/artifacts"
+BASELINE_DIR = "benchmarks/baselines"
+BENCH_FILES = ("BENCH_sim.json", "BENCH_comm.json", "BENCH_trace.json")
+
+# deterministic, smaller-is-better metric keys (matched on the LAST path
+# segment). Anything not matched here is informational, never gated —
+# notably the loss-DERIVED numbers (final_loss, t_to_target_s): XLA-CPU
+# float results can shift across runner CPU generations, and a tiny loss
+# perturbation moves a threshold crossing by a whole round. Only the
+# radio/codec-derived metrics are stable across hosts.
+GATED_KEY_RES = (
+    r"^wallclock_s$",
+    r"^per_period_s$",
+    r"^t_(fl|hfl)_[a-z_]*_s$",
+    r"^t_ul_(worst|median)_s$",
+    r"^bits_per_param(_mean)?$",
+    r"^bits_(access|fronthaul)_total$",
+    r"^flop_ratio$",
+    # comm: per-codec bits/param live under bits_per_param/<codec>/<phi>
+    r"^\d+(\.\d+)?$",
+)
+GATED_PARENT_RES = (
+    # numeric leaf keys (the φ values) gate only under a bits_per_param tree
+    (r"^\d+(\.\d+)?$", r"bits_per_param"),
+)
+
+
+def _is_gated(path: str) -> bool:
+    key = path.rsplit("/", 1)[-1]
+    for pat in GATED_KEY_RES:
+        if re.match(pat, key):
+            for leaf_pat, parent_pat in GATED_PARENT_RES:
+                if re.match(leaf_pat, key):
+                    return re.search(parent_pat, path) is not None
+            return True
+    return False
+
+
+def collect(obj, prefix: str = "") -> dict:
+    """Flatten a JSON tree to {slash/path: float} over numeric leaves."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(collect(v, f"{prefix}/{k}" if prefix else str(k)))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        out[prefix] = float(obj)
+    return out
+
+
+def compare(base: dict, fresh: dict, tol: float):
+    """-> (regressions, missing, unblessed, improvements) over the gated
+    metrics. ``missing`` = gated baseline keys gone from the fresh
+    artifact; ``unblessed`` = gated FRESH keys with no baseline (a new
+    scenario/codec whose perf surface is not yet gated — bless it)."""
+    regressions, missing, improvements = [], [], []
+    for path, b in sorted(base.items()):
+        if not _is_gated(path):
+            continue
+        if path not in fresh:
+            missing.append(path)
+            continue
+        f = fresh[path]
+        if b <= 0.0:
+            continue  # zero/negative baselines carry no regression signal
+        rel = (f - b) / b
+        if rel > tol:
+            regressions.append((path, b, f, rel))
+        elif rel < -tol:
+            improvements.append((path, b, f, rel))
+    unblessed = [p for p in sorted(fresh)
+                 if _is_gated(p) and p not in base]
+    return regressions, missing, unblessed, improvements
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Gate fresh BENCH_*.json against committed baselines")
+    ap.add_argument("--artifact-dir", default=ARTIFACT_DIR)
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR)
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative regression allowed on gated metrics")
+    ap.add_argument("--update", action="store_true",
+                    help="bless: copy fresh artifacts over the baselines")
+    ap.add_argument("names", nargs="*", default=[],
+                    help="restrict to these BENCH_*.json file names")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        names = args.names or [
+            n for n in BENCH_FILES
+            if os.path.exists(os.path.join(args.artifact_dir, n))]
+        os.makedirs(args.baseline_dir, exist_ok=True)
+        for name in names:
+            src = os.path.join(args.artifact_dir, name)
+            if not os.path.exists(src):
+                print(f"update: SKIP {name} (no fresh artifact at {src})")
+                continue
+            shutil.copyfile(src, os.path.join(args.baseline_dir, name))
+            print(f"update: {src} -> {args.baseline_dir}/{name}")
+        return 0
+
+    # gate mode covers the FULL canonical set: a missing baseline fails
+    # rather than silently un-gating that perf surface
+    names = args.names or list(BENCH_FILES)
+    failed = False
+    for name in names:
+        bpath = os.path.join(args.baseline_dir, name)
+        fpath = os.path.join(args.artifact_dir, name)
+        if not os.path.exists(bpath):
+            print(f"{name}: FAIL — no committed baseline at {bpath}; this "
+                  f"perf surface is un-gated (generate the artifact and "
+                  f"bless it with --update)")
+            failed = True
+            continue
+        if not os.path.exists(fpath):
+            print(f"{name}: FAIL — fresh artifact missing at {fpath} "
+                  f"(run `python -m benchmarks.run --only sim,comm,trace`)")
+            failed = True
+            continue
+        with open(bpath) as f:
+            base = collect(json.load(f))
+        with open(fpath) as f:
+            fresh = collect(json.load(f))
+        regs, missing, unblessed, improved = compare(base, fresh,
+                                                     args.tolerance)
+        n_gated = sum(1 for p in base if _is_gated(p))
+        bad = bool(regs or missing or unblessed)
+        print(f"{name}: {'FAIL' if bad else 'ok'} — {n_gated} gated metrics, "
+              f"{len(regs)} regressed, {len(missing)} missing, "
+              f"{len(unblessed)} unblessed, "
+              f"{len(improved)} improved beyond tolerance")
+        for path, b, f_, rel in regs:
+            print(f"  REGRESSION {path}: {b:.6g} -> {f_:.6g} (+{rel:.0%}, "
+                  f"tolerance {args.tolerance:.0%})")
+        for path in missing:
+            print(f"  MISSING    {path}: gated metric dropped from the fresh "
+                  f"artifact (bless schema changes with --update)")
+        for path in unblessed:
+            print(f"  UNBLESSED  {path}: new gated metric has no baseline — "
+                  f"its perf surface is un-gated until blessed (--update)")
+        for path, b, f_, rel in improved:
+            print(f"  improved   {path}: {b:.6g} -> {f_:.6g} ({rel:.0%}) — "
+                  f"consider re-blessing with --update")
+        failed |= bad
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

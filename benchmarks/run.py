@@ -139,6 +139,19 @@ def bench_sim():
     return out
 
 
+def bench_trace():
+    """Trace-driven mobility replay: wall-clock-to-target-loss per residency
+    policy + the masked train step's FLOP win. Writes BENCH_trace.json."""
+    from benchmarks.trace_replay import run
+    rows, artifact = run()
+    os.makedirs("benchmarks/artifacts", exist_ok=True)
+    path = "benchmarks/artifacts/BENCH_trace.json"
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=1, default=float)
+    rows.append(("trace/artifact", path))
+    return rows
+
+
 ALL = {
     "fig3": bench_fig3,
     "fig4": bench_fig4,
@@ -149,6 +162,7 @@ ALL = {
     "sync": bench_fused_sync,
     "sim": bench_sim,
     "comm": bench_comm,
+    "trace": bench_trace,
 }
 
 

@@ -236,6 +236,24 @@ class SimConfig:
     deadline_factor: float = 1.5  # deadline = factor * median per-MU round time
     staleness_exp: float = 1.0  # async weight = (1/N) * (1+staleness)^-exp
     reuse: int = 1  # frequency-reuse factor for the cluster coloring
+    # --- trace-driven mobility replay (repro.sim.traces) ---
+    # external CSV/JSONL trace to replay (columns t,mu_id,x,y); exclusive
+    # with speed_mps > 0 and with trace_model
+    trace_file: Optional[str] = None
+    # synthetic trace generator to replay instead of a file:
+    # random-waypoint | manhattan | hotspot-drift
+    trace_model: Optional[str] = None
+    trace_speed_mps: float = 0.0  # generator speed; 0 = the model's default
+    trace_duration_s: float = 600.0  # generated trace length [virtual s]
+    trace_dt_s: float = 5.0  # generator sample spacing [virtual s]
+    # data residency as mobility re-associates MUs
+    # (data.federated.ResidencyTracker):
+    #   static    -- legacy: shards pinned to birth slots, no tracker
+    #   move      -- the shard follows the MU's radio association
+    #   duplicate -- every visited cluster keeps a copy
+    #   stale     -- tracker attached but shards never leave the birth
+    #                cluster (explicit control arm for the benchmark)
+    residency: str = "static"
 
 
 # registry is populated by repro.configs.__init__

@@ -3,6 +3,7 @@ from repro.core.hfl import (
     HFLState,
     hfl_init,
     make_cluster_train_step,
+    make_masked_cluster_train_step,
     make_sync_step,
     serving_params,
 )

@@ -106,6 +106,36 @@ def make_cluster_train_step(loss_fn: Callable, optimizer, lr_schedule):
     return train_step
 
 
+def make_masked_cluster_train_step(loss_fn: Callable, optimizer, lr_schedule):
+    """One iteration of ONE cluster: grads/update for row ``n`` only.
+
+    The vmapped step computes all N clusters even when the caller (the
+    async / trace-replay disciplines) advances a single one — N-1 clusters
+    of wasted forward+backward per launch. This step slices cluster ``n``
+    out of the stacked state, trains just that model, and writes the row
+    back in place (a dynamic-update-slice under donation), so its FLOPs
+    are ~1/N of the vmapped step's (asserted via ``launch.hlo_cost`` in
+    the tier-1 suite).
+
+    ``batch_n`` leaves are a single cluster's rows ``[localB, ...]`` (no
+    cluster axis); ``n`` is a traced int32 so one compiled program serves
+    every cluster. Returns ``(state, loss)`` with ``loss`` a scalar.
+    """
+
+    def train_step(state: HFLState, batch_n, n):
+        lr = lr_schedule(state.step)
+        params_n = jax.tree.map(lambda p: p[n], state.params)
+        opt_n = jax.tree.map(lambda o: o[n], state.opt)
+        (loss, _aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params_n, batch_n)
+        new_p, new_o = optimizer.update(grads, opt_n, params_n, lr)
+        params = jax.tree.map(lambda P, q: P.at[n].set(q), state.params, new_p)
+        opt = jax.tree.map(lambda O, q: O.at[n].set(q), state.opt, new_o)
+        return state._replace(params=params, opt=opt, step=state.step + 1), loss
+
+    return train_step
+
+
 # ---------------------------------------------------------------------------
 # Inter-cluster sync (every H steps)
 # ---------------------------------------------------------------------------

@@ -1,13 +1,22 @@
-"""Federated dataset partitioning across K MUs.
+"""Federated dataset partitioning across K MUs + mobile data residency.
 
 The paper divides CIFAR-10 "among the MUs without any shuffling" (sequential
 = label-skewed when the source is class-ordered); we provide IID,
 label-sorted (the paper's split applied to a class-ordered set), and
 Dirichlet non-IID (the standard benchmark for its §VI-D future work).
+
+``ResidencyTracker`` adds the *dynamic* half: when mobility re-associates
+an MU to a different SBS, which cluster trains on its data? Three policies
+(``RESIDENCY_POLICIES``) bracket the design space — ``move`` (the shard
+follows the radio), ``duplicate`` (every visited cluster keeps a copy) and
+``stale`` (data stays in the birth cluster; the radio moves alone, i.e.
+the pre-residency simulator behaviour as an explicit control arm).
 """
 from __future__ import annotations
 
 import numpy as np
+
+RESIDENCY_POLICIES = ("move", "duplicate", "stale")
 
 
 def partition_iid(n: int, K: int, rng=None):
@@ -19,6 +28,78 @@ def partition_iid(n: int, K: int, rng=None):
 def partition_label_sorted(labels, K: int):
     idx = np.argsort(labels, kind="stable")
     return np.array_split(idx, K)
+
+
+class ResidencyTracker:
+    """Which cluster(s) hold each MU's data shard as association changes.
+
+    State is a boolean ``holds`` matrix [N, K]: ``holds[n, k]`` means
+    cluster ``n`` currently trains on MU ``k``'s shard. ``update(cid)``
+    applies a radio re-association under the policy:
+
+      * ``move``      — the shard follows the MU: exactly one holder per
+                        MU at all times (conservation invariant: each
+                        column sums to 1).
+      * ``duplicate`` — visited clusters keep a copy: holders accrue, so
+                        column sums are monotonically non-decreasing and
+                        at least 1 (no shard is ever lost).
+      * ``stale``     — the shard never leaves the birth cluster; the
+                        radio association is ignored for data placement.
+
+    The tracker is pure bookkeeping over MU ids; the simulation engine maps
+    holders to batch rows (``sim.engine``), so gradient distributions in a
+    cluster really change when its resident population does.
+    """
+
+    def __init__(self, initial_cid, num_clusters: int, policy: str = "move"):
+        if policy not in RESIDENCY_POLICIES:
+            raise ValueError(
+                f"unknown residency policy {policy!r}; "
+                f"choose from {RESIDENCY_POLICIES}")
+        cid = np.asarray(initial_cid, int)
+        self.policy = policy
+        self.N = int(num_clusters)
+        self.K = len(cid)
+        self.home = cid.copy()
+        if cid.min() < 0 or cid.max() >= self.N:
+            raise ValueError("initial_cid outside 0..N-1")
+        self.holds = np.zeros((self.N, self.K), bool)
+        self.holds[cid, np.arange(self.K)] = True
+
+    def update(self, cid) -> None:
+        """Apply a radio re-association (``cid`` [K]) under the policy."""
+        cid = np.asarray(cid, int)
+        assert cid.shape == (self.K,)
+        if self.policy == "stale":
+            return
+        if self.policy == "move":
+            self.holds[:] = False
+        self.holds[cid, np.arange(self.K)] = True
+
+    def members(self, n: int) -> np.ndarray:
+        """MU ids whose data cluster ``n`` currently trains on."""
+        return np.nonzero(self.holds[n])[0]
+
+    def counts(self) -> np.ndarray:
+        """Resident shard count per cluster [N]."""
+        return self.holds.sum(axis=1)
+
+    def check_conservation(self) -> None:
+        """Raise if a shard was lost (all policies), double-counted
+        (``move``/``stale``, which promise exactly one holder per MU), or —
+        under ``stale`` — ever left its birth cluster."""
+        per_mu = self.holds.sum(axis=0)
+        if (per_mu < 1).any():
+            lost = np.nonzero(per_mu < 1)[0]
+            raise AssertionError(f"shards lost for MUs {lost.tolist()[:8]}")
+        if self.policy != "duplicate" and (per_mu > 1).any():
+            dup = np.nonzero(per_mu > 1)[0]
+            raise AssertionError(
+                f"shards double-counted for MUs {dup.tolist()[:8]} "
+                f"under policy {self.policy!r}")
+        if self.policy == "stale" and \
+                not self.holds[self.home, np.arange(self.K)].all():
+            raise AssertionError("stale shards left their birth cluster")
 
 
 def partition_dirichlet(labels, K: int, alpha: float = 0.5, rng=None):

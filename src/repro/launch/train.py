@@ -94,13 +94,25 @@ def main(argv=None):
     ap.add_argument("--scenario", default=None,
                     help="run through the HCN simulator (repro.sim): "
                          "paper-fig3 | stragglers | mobility | dropout | "
-                         "async | scale-100k. A scenario may pin HFL "
-                         "settings (paper-fig3 pins the paper's 7-cluster "
-                         "topology, K=4, H=2, φ).")
+                         "async | trace-replay | manhattan | scale-100k. "
+                         "A scenario may pin HFL settings (paper-fig3 pins "
+                         "the paper's 7-cluster topology, K=4, H=2, φ).")
     ap.add_argument("--sim-seed", type=int, default=0,
                     help="fleet/scenario seed (replay is bit-identical)")
     ap.add_argument("--trace-out", default=None,
                     help="write the wall-clock trace JSON here")
+    ap.add_argument("--trace-in", default=None,
+                    help="replay an external mobility trace (CSV with a "
+                         "t,mu_id,x,y header, or JSONL with those keys) "
+                         "instead of the scenario's built-in mobility; "
+                         "mu count must equal clusters*mus")
+    ap.add_argument("--residency", default=None,
+                    choices=["static", "move", "duplicate", "stale"],
+                    help="data residency policy as mobility re-associates "
+                         "MUs (overrides the scenario): static = shards "
+                         "pinned to birth slots; move = shard follows the "
+                         "radio; duplicate = visited clusters keep a copy; "
+                         "stale = tracked but never moves")
     args = ap.parse_args(argv)
 
     scenario = None
@@ -173,12 +185,22 @@ def main(argv=None):
 
     trace = None
     if scenario is not None:
+        from repro.core.hfl import make_masked_cluster_train_step
         from repro.sim.scenarios import build_engine
-        engine = build_engine(scenario, hfl, seed=args.sim_seed)
+        engine = build_engine(scenario, hfl, seed=args.sim_seed,
+                              trace_file=args.trace_in,
+                              residency=args.residency)
+        # async/trace rounds advance ONE cluster: the masked step computes
+        # only that cluster (~1/N the FLOPs of the vmapped step)
+        masked_step = jax.jit(
+            make_masked_cluster_train_step(loss_fn, opt, sched),
+            donate_argnums=0)
         state, trace = engine.run(state, train_step, sync_step, batches(),
-                                  args.steps, on_step=on_step)
+                                  args.steps, on_step=on_step,
+                                  masked_train_step=masked_step)
         m = trace.meta
         print(f"[sim] scenario={scenario.name} discipline={m['discipline']} "
+              f"residency={m['residency']} "
               f"virtual-wallclock={trace.wallclock:.3f}s "
               f"syncs={m['sync_launches']} "
               f"fronthaul={m['bits_fronthaul_total']/8e6:.2f}MB")

@@ -12,8 +12,9 @@ from repro.sim.devices import DeviceFleet
 from repro.sim.engine import SimEngine, Trace
 from repro.sim.events import Event, EventQueue
 from repro.sim.scenarios import SCENARIOS, get_scenario
+from repro.sim.traces import MobilityTrace, generate as generate_trace
 
 __all__ = [
     "DeviceFleet", "SimEngine", "Trace", "Event", "EventQueue",
-    "SCENARIOS", "get_scenario",
+    "SCENARIOS", "get_scenario", "MobilityTrace", "generate_trace",
 ]

@@ -7,6 +7,12 @@ multipliers — the straggler source), whether it shows up for a round
 (random-waypoint mobility over the HCN disk, with re-association to the
 nearest SBS when it crosses a cluster boundary).
 
+Positions come from one of two mutually exclusive sources: the built-in
+random-waypoint integrator (``speed_mps > 0``) or a replayed
+``sim.traces.MobilityTrace`` (``trace=``), in which case ``advance``
+reads positions off the recorded trajectory at the fleet's accumulated
+virtual time instead of integrating.
+
 Everything is driven by one ``numpy`` Generator seeded at construction, so
 a fleet replayed from the same seed produces bit-identical traces.
 """
@@ -19,6 +25,41 @@ import numpy as np
 from repro.wireless.topology import HCNTopology, uniform_disk
 
 
+def waypoint_step(pos, waypoints, budget, rng, radius: float):
+    """Advance agents along random-waypoint legs until ``budget`` (metres
+    per agent) is spent: partial moves toward the waypoint, arrivals land
+    on it, redraw a fresh uniform waypoint and spend the leftover (classic
+    zero-pause random waypoint). Mutates ``pos``/``waypoints``/``budget``
+    in place and returns ``(pos, waypoints)``.
+
+    The ONE integrator shared by live fleets (``DeviceFleet.advance``) and
+    the trace generator (``sim.traces.gen_random_waypoint``), so the two
+    can never drift apart. Pass capping: each pass consumes a full
+    waypoint leg (~disk radius on average) or zeroes a lane; a fixed small
+    count would silently under-move agents for large budgets.
+    """
+    max_legs = 8 + int(np.ceil(budget.max() / (0.25 * radius)))
+    for _ in range(max_legs):
+        vec = waypoints - pos
+        dist = np.linalg.norm(vec, axis=1)
+        moving = budget > 0
+        arrive = moving & (dist <= budget)
+        if not moving.any():
+            break
+        # partial move toward the waypoint
+        part = moving & ~arrive
+        if part.any():
+            step = vec[part] / np.maximum(dist[part], 1e-12)[:, None]
+            pos[part] += step * budget[part, None]
+            budget[part] = 0.0
+        # arrivals: land on the waypoint, redraw, spend the leftover
+        if arrive.any():
+            pos[arrive] = waypoints[arrive]
+            budget[arrive] -= dist[arrive]
+            waypoints[arrive] = uniform_disk(rng, int(arrive.sum()), radius)
+    return pos, waypoints
+
+
 class DeviceFleet:
     """Dynamic state of the K MUs dropped on an ``HCNTopology``.
 
@@ -28,6 +69,10 @@ class DeviceFleet:
         (normalised so the multiplier has mean 1; 0 = homogeneous fleet).
     dropout : per-round probability that an MU is unavailable.
     speed_mps : random-waypoint speed; 0 = static users (paper setting).
+    trace : a ``sim.traces.MobilityTrace`` to REPLAY instead of the
+        waypoint model (mutually exclusive with ``speed_mps > 0``). Its K
+        must match the topology's MU count; initial positions and
+        cluster association come from the trace at t=0.
     """
 
     def __init__(
@@ -40,6 +85,7 @@ class DeviceFleet:
         speed_mps: float = 0.0,
         seed: int = 0,
         compute_mult: Optional[np.ndarray] = None,
+        trace=None,
     ):
         self.topo = topo
         self.rng = np.random.default_rng(seed)
@@ -47,6 +93,15 @@ class DeviceFleet:
         self.K = len(self.cid)
         self.dropout = float(dropout)
         self.speed_mps = float(speed_mps)
+        self.trace = trace
+        self._trace_t = 0.0
+        if trace is not None:
+            assert speed_mps == 0.0, \
+                "trace replay and the waypoint integrator are exclusive"
+            assert trace.K == self.K, \
+                f"trace has {trace.K} MUs but the topology drops {self.K}"
+            self.pos = trace.at(0.0)
+            self.reassociate()
         if compute_mult is not None:
             self.compute_mult = np.asarray(compute_mult, np.float64)
             assert self.compute_mult.shape == (self.K,)
@@ -78,42 +133,34 @@ class DeviceFleet:
 
     # --- mobility --------------------------------------------------------
 
+    @property
+    def mobile(self) -> bool:
+        """True when positions change over time (waypoint or trace replay)."""
+        return self.speed_mps > 0 or self.trace is not None
+
     def _draw_waypoints(self, n: int) -> np.ndarray:
         """Uniform waypoints in the HCN disk (random-waypoint model)."""
         return uniform_disk(self.rng, n, self.topo.area_radius)
 
     def advance(self, dt: float) -> None:
-        """Move every MU ``dt`` virtual seconds toward its waypoint.
+        """Move every MU ``dt`` virtual seconds toward its waypoint — or,
+        under trace replay, read positions off the recorded trajectory at
+        the fleet's accumulated virtual time.
 
         An MU that reaches its waypoint inside ``dt`` draws a fresh one and
         keeps moving with the leftover time budget (classic random waypoint,
         zero pause time).
         """
+        if self.trace is not None:
+            if dt > 0:
+                self._trace_t += dt
+                self.pos = self.trace.at(self._trace_t)
+            return
         if self.speed_mps <= 0 or dt <= 0:
             return
         budget = np.full(self.K, dt * self.speed_mps)  # metres left to move
-        # enough passes to spend the whole budget: each consumes a full
-        # waypoint leg (~disk radius on average) or zeroes a lane. A fixed
-        # small count would silently under-move MUs for large dt.
-        max_legs = 8 + int(np.ceil(budget[0] / (0.25 * self.topo.area_radius)))
-        for _ in range(max_legs):
-            vec = self._waypoint - self.pos
-            dist = np.linalg.norm(vec, axis=1)
-            moving = budget > 0
-            arrive = moving & (dist <= budget)
-            if not moving.any():
-                break
-            # partial move toward the waypoint
-            part = moving & ~arrive
-            if part.any():
-                step = vec[part] / np.maximum(dist[part], 1e-12)[:, None]
-                self.pos[part] += step * budget[part, None]
-                budget[part] = 0.0
-            # arrivals: land on the waypoint, redraw, spend the leftover
-            if arrive.any():
-                self.pos[arrive] = self._waypoint[arrive]
-                budget[arrive] -= dist[arrive]
-                self._waypoint[arrive] = self._draw_waypoints(int(arrive.sum()))
+        waypoint_step(self.pos, self._waypoint, budget, self.rng,
+                      self.topo.area_radius)
 
     def reassociate(self) -> np.ndarray:
         """Re-attach every MU to its nearest SBS; returns new cid [K]."""

@@ -37,14 +37,27 @@ event (a jitted probe re-runs the sync's Ω selection on the same state),
 the per-iteration access links with the codec on synthetic exact-k
 payloads, and a per-link ``PayloadLedger`` lands in the trace meta.
 
-Modelling simplifications (documented, not hidden): data residency is
+Mobility sources: the built-in random-waypoint integrator, or *trace
+replay* (``sim.traces``) — the fleet reads recorded positions off an
+external CSV/JSONL trace (or a synthetic generator) at the engine's
+virtual time, so real mobility datasets drive the byte-accurate time axis.
+
+Data residency (``data.federated.ResidencyTracker``): by default data is
 static — MU k always trains in cluster ``k // mus_per_cluster`` — while
-*radio* association follows mobility; the async downlink applies the fresh
-reference densely unless ``HFLConfig.async_dl_sparse`` enables the
-per-cluster-error sparse downlink; async event *times* are scheduled from
-the static measured estimates (payloads are only known at the event);
-and the vmapped train step computes all clusters even when async advances
-only one (the price of reusing the real fused program).
+*radio* association follows mobility. With a tracker attached, each
+re-association remaps shards under a policy (``move`` / ``duplicate`` /
+``stale``), and the engine gathers every cluster's batch rows from its
+*resident* MUs' data slots, so cluster gradient distributions actually
+shift as the fleet moves.
+
+Remaining modelling simplifications (documented, not hidden): the async
+downlink applies the fresh reference densely unless
+``HFLConfig.async_dl_sparse`` enables the per-cluster-error sparse
+downlink; async event *times* are scheduled from the static measured
+estimates (payloads are only known at the event); and the async/trace
+disciplines compute all N clusters per launch unless the caller supplies
+``masked_train_step`` (``core.hfl.make_masked_cluster_train_step``), which
+slices out the active cluster and cuts per-launch FLOPs to ~1/N.
 """
 from __future__ import annotations
 
@@ -269,6 +282,7 @@ class SimEngine:
         fleet: Optional[DeviceFleet] = None,
         lp: Optional[LatencyParams] = None,
         record: bool = True,
+        residency=None,
     ):
         # record=False skips trace rows (and the per-step loss
         # materialisation they force): the run_hfl adapter discards the
@@ -283,6 +297,15 @@ class SimEngine:
         if self.wireless:
             assert hfl_cfg is not None, "wireless simulation needs hfl_cfg"
             assert fleet.K == hfl_cfg.num_clusters * hfl_cfg.mus_per_cluster
+        # data residency tracker (data.federated.ResidencyTracker): when
+        # set, batch rows follow the resident shards instead of the static
+        # slot layout. None = legacy static residency (bit-identical).
+        self.residency = residency
+        self._slot_rot = 0  # per-round rotation of the resident selection
+        if residency is not None:
+            assert self.wireless, "residency tracking needs the fleet"
+            assert residency.K == fleet.K and \
+                residency.N == hfl_cfg.num_clusters
         self._aux = None  # cached hfl_latency aux for the current positions
         self._train_launches = 0
         self._sync_launches = 0
@@ -322,6 +345,7 @@ class SimEngine:
         batches: Iterable,
         num_steps: int,
         on_step: Optional[Callable] = None,
+        masked_train_step: Optional[Callable] = None,
     ):
         """-> (final_state, Trace). Deterministic in (scenario, seed) for a
         FRESH engine: the fleet RNG and positions advance across calls, so
@@ -331,7 +355,10 @@ class SimEngine:
         Under the ``async`` discipline ``sync_step`` is unused: per-cluster
         consensus cannot be expressed by the all-cluster sync, so the
         engine derives a staleness-weighted per-cluster sync from
-        ``hfl_cfg`` (``make_async_sync_step``) instead.
+        ``hfl_cfg`` (``make_async_sync_step``) instead. ``masked_train_step``
+        (``core.hfl.make_masked_cluster_train_step``, jitted by the caller)
+        lets async rounds compute ONLY the active cluster — ~1/N the FLOPs
+        of the vmapped ``train_step``, which is used as the fallback.
         """
         # fresh launch/byte accumulators so a reused engine's meta counts
         # only its own run (its fleet state still advances, see above)
@@ -339,6 +366,7 @@ class SimEngine:
         self._sync_launches = 0
         self._bits_access = 0.0
         self._bits_fronthaul = 0.0
+        self._slot_rot = 0
         self._setup_measured(state)
         disc = self.sim.discipline
         if disc in ("lockstep", "deadline"):
@@ -347,7 +375,8 @@ class SimEngine:
                 deadline=disc == "deadline",
             )
         if disc == "async":
-            return self._run_async(state, train_step, batches, num_steps, on_step)
+            return self._run_async(state, train_step, batches, num_steps,
+                                   on_step, masked_train_step)
         raise ValueError(f"unknown discipline {disc!r}")
 
     # --- wireless plumbing -----------------------------------------------
@@ -419,7 +448,12 @@ class SimEngine:
             "seed": self.sim.seed,
             "period": self.period,
             "payload_accounting": self._acc,
+            "residency": (self.residency.policy if self.residency is not None
+                          else "static"),
         }
+        if self.fleet is not None and self.fleet.trace is not None:
+            meta["trace_replay"] = True
+            meta["trace_duration_s"] = self.fleet.trace.duration
         if self.ledger is not None:
             meta["codec"] = self.ledger.codec
             meta["payload_size"] = self.ledger.size
@@ -489,6 +523,19 @@ class SimEngine:
             if not m_keep.any():
                 continue  # no survivors: the cluster sits this round out
             rates = aux["mu_rates"][n]
+            if not m_keep.all():
+                # a dropped/unavailable MU's sub-carriers are reclaimed:
+                # re-run the max-min allocation (Alg. 2) over the survivors
+                # with the cluster's full budget, so they inherit the
+                # bandwidth instead of leaving it dark (ROADMAP follow-up)
+                from repro.wireless.subcarrier import reallocate_after_drop
+
+                d = self.topo.dist_to_sbs(
+                    self.fleet.pos[members], self.fleet.cid[members])
+                rates = reallocate_after_drop(
+                    d, m_keep, aux["m_cluster"],
+                    B0=lp.B0, Pmax=lp.p_mu, N0=lp.n0,
+                    alpha=lp.alpha, ber=lp.ber)
             it_n[n] = (
                 ul_pay / rates[m_keep].min()
                 + aux["gamma_dl"][n]
@@ -510,6 +557,90 @@ class SimEngine:
             participants=int(mask.sum()),
             deadline_s=deadline_s,
         )
+
+    def _advance_fleet(self, dt: float) -> None:
+        """Advance positions (waypoint integration or trace replay),
+        re-associate to the nearest SBS, propagate the new association to
+        the residency tracker, and invalidate the cached radio pricing."""
+        if self.fleet is None or not self.fleet.mobile:
+            return
+        self.fleet.advance(dt)
+        self.fleet.reassociate()
+        if self.residency is not None:
+            self.residency.update(self.fleet.cid)
+        self._aux = None  # positions changed: re-price the radio
+
+    # --- data residency ---------------------------------------------------
+
+    def _slot_sources(self, mask: Optional[np.ndarray]) -> np.ndarray:
+        """Source MU id per (cluster, slot) under the residency map [N, mpc].
+
+        Slot ``(n, j)`` is filled by cycling over cluster ``n``'s available
+        resident MUs (mirroring ``_apply_participation``'s resample rule);
+        a ``-1`` row marks a cluster with no available resident shard —
+        it sits the round out. A deterministic per-round rotation spreads
+        the selection over ALL residents when a cluster holds more shards
+        than slots (the duplicate policy's steady state; a fixed start
+        would train the lowest-id shards forever).
+        """
+        N, mpc = self.hfl.num_clusters, self.hfl.mus_per_cluster
+        src = np.full((N, mpc), -1, np.int64)
+        off = self._slot_rot
+        self._slot_rot += 1
+        for n in range(N):
+            cand = self.residency.members(n)
+            if mask is not None:
+                cand = cand[mask[cand]]
+            if cand.size:
+                src[n] = cand[(np.arange(mpc) + off * mpc) % cand.size]
+        return src
+
+    def _gather_batch(self, batch, src: np.ndarray):
+        """Rebuild the [N, localB] batch so cluster ``n``'s rows come from
+        its resident MUs' data slots (MU k's rows live at
+        ``[k // mpc, (k % mpc)*bpm : (k % mpc + 1)*bpm]`` of the generated
+        batch). -> (batch, keep) with ``keep`` a bool[N] mask of clusters
+        that have resident data (None when all do).
+        """
+        leaves = jax.tree.leaves(batch)
+        if not leaves or leaves[0].ndim < 2:
+            return batch, None
+        N, mpc = self.hfl.num_clusters, self.hfl.mus_per_cluster
+        localB = leaves[0].shape[1]
+        if localB % mpc:
+            return batch, None  # unknown row layout; leave untouched
+        bpm = localB // mpc
+        keep = src[:, 0] >= 0
+        static = (np.arange(N) * mpc)[:, None] + np.arange(mpc)[None, :]
+        srcf = np.where(src >= 0, src, static)  # kept-out rows: identity
+        cl = np.repeat(srcf // mpc, bpm, axis=1)  # [N, localB]
+        row = (np.repeat((srcf % mpc) * bpm, bpm, axis=1)
+               + np.tile(np.arange(bpm), (N, mpc)))
+        clj, rowj = jnp.asarray(cl), jnp.asarray(row)
+        take = lambda leaf: leaf[clj, rowj] if leaf.ndim >= 2 else leaf
+        return jax.tree.map(take, batch), (None if keep.all() else keep)
+
+    def _gather_row(self, batch, src_n: np.ndarray, n: int):
+        """Row-only variant of ``_gather_batch`` for the masked path:
+        cluster ``n``'s [localB] rows gathered from its resident MUs' data
+        slots, without materializing the N-1 clusters the masked step
+        would immediately discard. ``src_n`` must have no -1 entries
+        (the caller idles those rounds)."""
+        leaves = jax.tree.leaves(batch)
+        take_row = lambda leaf: (leaf[n] if getattr(leaf, "ndim", 0) >= 2
+                                 else leaf)
+        if not leaves or leaves[0].ndim < 2:
+            return jax.tree.map(take_row, batch)
+        mpc = self.hfl.mus_per_cluster
+        localB = leaves[0].shape[1]
+        if localB % mpc:
+            return jax.tree.map(take_row, batch)  # unknown layout: slice
+        bpm = localB // mpc
+        cl = np.repeat(src_n // mpc, bpm)  # [localB]
+        row = np.repeat((src_n % mpc) * bpm, bpm) + np.tile(np.arange(bpm), mpc)
+        clj, rowj = jnp.asarray(cl), jnp.asarray(row)
+        take = lambda leaf: leaf[clj, rowj] if leaf.ndim >= 2 else leaf
+        return jax.tree.map(take, batch)
 
     def _apply_participation(self, batch, mask: Optional[np.ndarray]):
         """Resample dropped MUs' batch rows from their cluster's survivors."""
@@ -601,14 +732,30 @@ class SimEngine:
         for step in range(num_steps):
             if step % H == 0:
                 ctx = self._round_ctx(deadline)
-            batch = self._apply_participation(next(it), ctx["mask"])
+                if self.residency is not None:
+                    # resident shards (availability-filtered) decide which
+                    # data each cluster trains on this round; accounting
+                    # charges the DISTINCT shards that actually train, not
+                    # the static radio layout
+                    src = self._slot_sources(ctx["mask"])
+                    ctx["src"] = src
+                    ctx["participants"] = int(sum(
+                        np.unique(row[row >= 0]).size for row in src))
+                    ctx["active_clusters"] = int((src[:, 0] >= 0).sum())
+            if self.residency is not None:
+                batch, keep = self._gather_batch(next(it), ctx["src"])
+            else:
+                batch = self._apply_participation(next(it), ctx["mask"])
+                keep = ctx["keep_clusters"]
             new_state, loss = train_step(state, batch)
-            if ctx["keep_clusters"] is not None:
-                state = _merge_clusters(state, new_state, ctx["keep_clusters"])
+            if keep is not None:
+                state = _merge_clusters(state, new_state, keep)
             else:
                 state = new_state
             t += ctx["iter_s"]
-            self._count_train(ctx["participants"], N if N is not None else 1)
+            self._count_train(
+                ctx["participants"],
+                ctx.get("active_clusters", N if N is not None else 1))
             if self._record:
                 trace.add(kind="train", t=t, step=step,
                           loss=float(jnp.mean(loss)), dropped=ctx["dropped"])
@@ -639,10 +786,7 @@ class SimEngine:
                               deadline_s=ctx["deadline_s"],
                               iter_s=ctx["iter_s"], sync_s=sync_s,
                               **row_extra)
-                if self.fleet is not None and self.fleet.speed_mps > 0:
-                    self.fleet.advance(H * ctx["iter_s"] + sync_s)
-                    self.fleet.reassociate()
-                    self._aux = None  # positions changed: re-price the radio
+                self._advance_fleet(H * ctx["iter_s"] + sync_s)
             if on_step is not None:
                 on_step(step, state, loss)
         trace.meta.update(self._totals())
@@ -661,7 +805,8 @@ class SimEngine:
             self.period * (comp_n + g) + aux["theta_u"] + aux["theta_d"]
         )
 
-    def _run_async(self, state, train_step, batches, num_steps, on_step):
+    def _run_async(self, state, train_step, batches, num_steps, on_step,
+                   masked_train_step=None):
         hfl = self.hfl
         if hfl is None:
             raise ValueError("async discipline needs hfl_cfg")
@@ -695,19 +840,36 @@ class SimEngine:
         while len(q):
             t, ev = q.pop()
             n = ev.cluster
-            if self.fleet is not None and self.fleet.speed_mps > 0:
-                self.fleet.advance(t - fleet_time)
+            if self.fleet is not None and self.fleet.mobile:
+                self._advance_fleet(t - fleet_time)
                 fleet_time = t
-                self.fleet.reassociate()
-                self._aux = None
             # availability trace (dropout): unavailable MUs in this cluster's
-            # STATIC data slots sit the round out (their rows are resampled
-            # from the survivors); a fully-unavailable cluster idles the
-            # whole round. Round *times* are not availability-adjusted.
+            # data slots — static layout, or the resident shards when a
+            # residency tracker is attached — sit the round out (their rows
+            # are resampled from the survivors); a cluster with no available
+            # data idles the whole round. Round *times* are not
+            # availability-adjusted.
             mask = None
+            src = None
             dropped = 0
-            if self.fleet is not None and self.fleet.dropout > 0:
-                avail = self.fleet.draw_available()
+            avail = (self.fleet.draw_available()
+                     if self.fleet is not None and self.fleet.dropout > 0
+                     else None)
+            if self.residency is not None:
+                src = self._slot_sources(avail)
+                residents = self.residency.members(n)
+                if avail is not None:
+                    dropped = int((~avail[residents]).sum())
+                if src[n, 0] < 0:  # no available resident shard this round
+                    if self._record:
+                        trace.add(kind="idle", t=t, cluster=int(n),
+                                  round=int(ev.round), dropped=dropped)
+                    if ev.round + 1 < rounds:
+                        q.push(t + self._cluster_round_time(n, comp),
+                               Event("cluster_done", cluster=n,
+                                     round=ev.round + 1))
+                    continue
+            elif avail is not None:
                 slots = slice(n * mpc, (n + 1) * mpc)
                 dropped = int((~avail[slots]).sum())
                 if not avail[slots].any():
@@ -726,21 +888,47 @@ class SimEngine:
                 self.fleet.cluster_members(n).size if self.fleet is not None
                 else hfl.mus_per_cluster
             )
+            # access-link accounting charges the MUs whose data actually
+            # trains this round: _slot_sources fills at most mpc slots, so
+            # under a tracker that is min(available residents, mpc) — the
+            # duplicate policy can accrue far more holders than train —
+            # and the surviving radio members otherwise
+            participants = (min(int(residents.size) - dropped, mpc)
+                            if self.residency is not None
+                            else max(members - dropped, 0))
             # state.step feeds step-indexed LR schedules; pin it to THIS
             # cluster's per-round progress (round*H .. round*H + H), not the
             # global launch count, which inflates N-fold under async and
             # would decay the schedule N times too early.
             state = state._replace(step=jnp.asarray(ev.round * H, jnp.int32))
+            nj = jnp.int32(n)
             loss = None
             for _ in range(H):
-                batch = self._apply_participation(next(it), mask)
-                new_state, loss = train_step(state, batch)
-                state = _take_cluster_row(state, new_state, n)
+                batch = next(it)
+                if masked_train_step is not None:
+                    # masked step: compute ONLY the active cluster (~1/N
+                    # the FLOPs of the vmapped step; see core.hfl) — and
+                    # gather only ITS rows, not the N-1 it would discard
+                    if self.residency is not None:
+                        batch_n = self._gather_row(batch, src[n], n)
+                    else:
+                        batch_n = jax.tree.map(
+                            lambda l: (l[n] if getattr(l, "ndim", 0) >= 2
+                                       else l),
+                            self._apply_participation(batch, mask))
+                    state, loss = masked_train_step(state, batch_n, nj)
+                else:
+                    if self.residency is not None:
+                        batch, _keep = self._gather_batch(batch, src)
+                    else:
+                        batch = self._apply_participation(batch, mask)
+                    new_state, loss = train_step(state, batch)
+                    state = _take_cluster_row(state, new_state, n)
                 steps_done += 1
-                self._count_train(max(members - dropped, 0), 1)
+                self._count_train(participants, 1)
             staleness = global_updates - last_pull[n]
             w = async_weight(staleness, N, self.sim.staleness_exp)
-            nj, wj = jnp.int32(n), jnp.float32(w)
+            wj = jnp.float32(w)
             bits = None
             if dl_sparse and measured:
                 state, e_dl, bits = sync_n(state, e_dl, nj, wj)
@@ -760,10 +948,14 @@ class SimEngine:
             else:
                 self._count_sync(1)
             if self._record:
+                # the ACTIVE cluster's loss: the vmapped fallback computes
+                # all N rows but only row n was merged (the masked step
+                # returns row n's scalar directly)
+                loss_n = loss if jnp.ndim(loss) == 0 else loss[n]
                 trace.add(kind="sync", t=t, step=steps_done - 1,
                           cluster=int(n), round=int(ev.round),
                           staleness=int(staleness), weight=float(w),
-                          dropped=dropped, loss=float(jnp.mean(loss)))
+                          dropped=dropped, loss=float(loss_n))
             if on_step is not None:
                 on_step(steps_done - 1, state, loss)
             if ev.round + 1 < rounds:

@@ -14,6 +14,15 @@ Each scenario bundles a ``SimConfig`` (fleet + discipline knobs) with the
                       rounds out.
   * ``async``       — clusters sync on their own clocks with
                       staleness-weighted consensus.
+  * ``trace-replay`` — recorded mobility (a synthetic random-waypoint
+                      trace by default; any CSV/JSONL trace via
+                      ``trace_file``/``--trace-in``) drives positions,
+                      data residency follows re-association (``move``),
+                      and the async discipline advances one cluster per
+                      event — the masked-train-step workload.
+  * ``manhattan``   — street-grid mobility replay under the deadline
+                      discipline: abrupt, correlated re-associations plus
+                      straggler drop with sub-carrier reclamation.
   * ``scale-100k``  — vectorized 100k-MU latency sampling (kind
                       "sampling": aggregates only, never materializes
                       per-user state; no training).
@@ -85,6 +94,26 @@ SCENARIOS = {
         hfl=dict(sync_mode="sparse", async_dl_sparse=True, **PAPER_PHIS),
         note="per-cluster clocks, staleness-weighted consensus, sparse DL",
     ),
+    "trace-replay": Scenario(
+        name="trace-replay", kind="train",
+        sim=SimConfig(scenario="trace-replay", discipline="async",
+                      compute_sigma=0.5, trace_model="random-waypoint",
+                      trace_speed_mps=30.0, residency="move"),
+        # async + sparse DL: the workload where the masked train step and
+        # mobile data residency both bite
+        hfl=dict(sync_mode="sparse", async_dl_sparse=True, **PAPER_PHIS),
+        note="replayed mobility trace; shards follow re-association; "
+             "one active cluster per event (masked train step)",
+    ),
+    "manhattan": Scenario(
+        name="manhattan", kind="train",
+        sim=SimConfig(scenario="manhattan", discipline="deadline",
+                      compute_sigma=0.5, deadline_factor=1.5,
+                      trace_model="manhattan", residency="move"),
+        hfl=dict(sync_mode="sparse", **PAPER_PHIS),
+        note="street-grid trace replay + deadline drop; survivors inherit "
+             "reclaimed sub-carriers",
+    ),
     "scale-100k": Scenario(
         name="scale-100k", kind="sampling",
         sim=SimConfig(scenario="scale-100k"),
@@ -104,25 +133,74 @@ def apply_hfl_overrides(scn: Scenario, hfl_cfg: HFLConfig) -> HFLConfig:
     return dataclasses.replace(hfl_cfg, **scn.hfl) if scn.hfl else hfl_cfg
 
 
+def build_trace(sim: SimConfig, hfl_cfg: HFLConfig, topo: HCNTopology):
+    """Mobility trace for a scenario: load ``trace_file`` if set, else run
+    the named synthetic generator; None when the scenario has neither."""
+    from repro.sim import traces as tr
+
+    if sim.trace_file is not None:
+        trace = tr.MobilityTrace.load(sim.trace_file)
+        if trace.K != hfl_cfg.total_mus:
+            raise ValueError(
+                f"trace {sim.trace_file} has {trace.K} MUs but the config "
+                f"needs N*K = {hfl_cfg.total_mus}")
+        return trace
+    if sim.trace_model is not None:
+        return tr.generate(
+            sim.trace_model, hfl_cfg.total_mus, sim.trace_duration_s,
+            radius=topo.area_radius, seed=sim.seed,
+            speed_mps=sim.trace_speed_mps if sim.trace_speed_mps > 0 else None,
+            dt=sim.trace_dt_s,
+        )
+    return None
+
+
 def build_engine(
     scn: Scenario,
     hfl_cfg: HFLConfig,
     *,
     lp: Optional[LatencyParams] = None,
     seed: Optional[int] = None,
+    trace_file: Optional[str] = None,
+    residency: Optional[str] = None,
 ) -> SimEngine:
-    """Topology + fleet + engine for a training scenario."""
+    """Topology + fleet (+ mobility trace + residency tracker) + engine
+    for a training scenario. ``trace_file``/``residency`` override the
+    scenario's ``SimConfig`` (the ``--trace-in``/``--residency`` CLI hooks).
+    """
     assert scn.kind == "train", f"{scn.name} is a sampling scenario"
-    sim = scn.sim if seed is None else dataclasses.replace(scn.sim, seed=seed)
+    sim = scn.sim
+    over = {}
+    if seed is not None:
+        over["seed"] = seed
+    if trace_file is not None:
+        over["trace_file"] = trace_file
+        over["trace_model"] = None
+    if residency is not None:
+        over["residency"] = residency
+    if over:
+        sim = dataclasses.replace(sim, **over)
+    if (sim.trace_file or sim.trace_model) and sim.speed_mps > 0:
+        # replay REPLACES the waypoint integrator: --trace-in on a scenario
+        # with built-in mobility (e.g. mobility) silences its speed_mps
+        sim = dataclasses.replace(sim, speed_mps=0.0)
     topo = HCNTopology(num_clusters=hfl_cfg.num_clusters, seed=sim.seed)
+    trace = build_trace(sim, hfl_cfg, topo)
     fleet = DeviceFleet(
         topo, hfl_cfg.mus_per_cluster,
         compute_sigma=sim.compute_sigma, dropout=sim.dropout,
-        speed_mps=sim.speed_mps, seed=sim.seed,
+        speed_mps=sim.speed_mps, seed=sim.seed, trace=trace,
     )
+    tracker = None
+    if sim.residency != "static":
+        from repro.data.federated import ResidencyTracker
+
+        tracker = ResidencyTracker(fleet.cid, hfl_cfg.num_clusters,
+                                   policy=sim.residency)
     return SimEngine(
         period=hfl_cfg.period, hfl_cfg=hfl_cfg, sim_cfg=sim,
         topo=topo, fleet=fleet, lp=lp if lp is not None else LatencyParams(),
+        residency=tracker,
     )
 
 

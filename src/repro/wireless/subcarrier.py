@@ -39,3 +39,27 @@ def allocate_subcarriers(distances, M: int, *, B0, Pmax, N0, alpha, ber):
 def min_rate(distances, M: int, **kw) -> float:
     _, rates = allocate_subcarriers(distances, M, **kw)
     return float(rates.min())
+
+
+def reallocate_after_drop(distances, alive, M: int, *, B0, Pmax, N0, alpha, ber):
+    """Re-run the max-min allocation over the SURVIVING MUs only.
+
+    When the deadline discipline drops a straggler mid-round, its
+    sub-carriers do not go dark: the scheduler re-runs Alg. 2 over the
+    survivors with the full ``M`` budget, so the reclaimed bandwidth
+    raises the survivors' (max-min) rates — every surviving rate is >= its
+    pre-drop value, because the greedy allocation with fewer users can
+    only give each user more sub-carriers.
+
+    -> rates array aligned with ``distances`` (0.0 for dropped MUs).
+    """
+    distances = np.asarray(distances, float)
+    alive = np.asarray(alive, bool)
+    assert alive.shape == distances.shape
+    rates = np.zeros(len(distances))
+    if alive.any():
+        _, r = allocate_subcarriers(
+            distances[alive], M, B0=B0, Pmax=Pmax, N0=N0, alpha=alpha, ber=ber
+        )
+        rates[alive] = r
+    return rates

@@ -1,0 +1,133 @@
+"""CI bench-regression gate: gating rules, tolerance math, update flow.
+
+Pure-host tests (no jax): the gate is CI infrastructure, so it gets the
+same tier-1 treatment as the code it guards — a gate that silently stops
+gating is worse than no gate.
+"""
+import json
+import os
+
+import pytest
+
+from benchmarks.check_regression import _is_gated, collect, compare, main
+
+
+def test_gated_keys_cover_the_deterministic_surface():
+    assert _is_gated("paper-fig3/wallclock_s")
+    assert _is_gated("stragglers/per_period_s")
+    assert _is_gated("paper-fig3/t_hfl_period_s")
+    assert _is_gated("paper-fig3/t_fl_iter_s")
+    assert _is_gated("scale-100k/t_ul_worst_s")
+    assert _is_gated("async/bits_fronthaul_total")
+    assert _is_gated("async/bits_access_total")
+    assert _is_gated("masked_step/flop_ratio")
+    assert _is_gated("bits_per_param/delta-varint/0.99")
+    assert _is_gated("best_winner_by_phi/0.99/bits_per_param")
+    assert _is_gated("async/bits_per_param_mean")
+
+
+def test_host_dependent_and_larger_better_keys_not_gated():
+    assert not _is_gated("encode_entries_per_s/delta-varint")
+    assert not _is_gated("paper-fig3/final_loss")
+    # loss-derived: a tiny XLA-CPU float shift moves the threshold
+    # crossing by a whole round — not stable across runner generations
+    assert not _is_gated("policies/move/t_to_target_s")
+    assert not _is_gated("scale-100k/rate_min_bps")
+    assert not _is_gated("paper-fig3/train_launches")
+    assert not _is_gated("size")
+    assert not _is_gated("seed")
+    # numeric leaves gate ONLY under a bits_per_param tree
+    assert not _is_gated("phis_by_name/0.99")
+
+
+def test_collect_flattens_numeric_leaves_only():
+    got = collect({"a": {"b": 1.5, "name": "x", "flag": True},
+                   "c": 2, "d": [1, 2]})
+    assert got == {"a/b": 1.5, "c": 2.0}  # bools/strings/lists skipped
+
+
+def test_compare_regression_missing_unblessed_improvement():
+    base = {"s/wallclock_s": 1.0, "s/bits_per_param_mean": 0.2,
+            "s/per_period_s": 4.0, "s/final_loss": 9.9}
+    fresh = {"s/wallclock_s": 1.30,          # +30% -> regression
+             "s/bits_per_param_mean": 0.10,  # -50% -> improvement
+             "new/wallclock_s": 2.0,         # gated but never blessed
+             "s/final_loss": 1e9}            # not gated: ignored
+    regs, missing, unblessed, improved = compare(base, fresh, tol=0.25)
+    assert [r[0] for r in regs] == ["s/wallclock_s"]
+    assert missing == ["s/per_period_s"]
+    assert unblessed == ["new/wallclock_s"]
+    assert [i[0] for i in improved] == ["s/bits_per_param_mean"]
+    # inside tolerance: clean
+    regs, missing, unblessed, _ = compare(
+        base, {"s/wallclock_s": 1.2, "s/bits_per_param_mean": 0.21,
+               "s/per_period_s": 4.9, "s/final_loss": 0.0}, tol=0.25)
+    assert not regs and not missing and not unblessed
+
+
+def _write(path, obj):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(obj, f)
+
+
+def test_main_end_to_end(tmp_path):
+    art = str(tmp_path / "artifacts")
+    basedir = str(tmp_path / "baselines")
+    gate = ["--artifact-dir", art, "--baseline-dir", basedir,
+            "BENCH_sim.json"]
+    good = {"paper-fig3": {"wallclock_s": 1.0, "final_loss": 5.0}}
+    _write(os.path.join(art, "BENCH_sim.json"), good)
+
+    # no baseline yet and no --update: explicit failure, not silent pass
+    assert main(gate) == 1
+
+    # bless, then the identical artifact passes
+    assert main(["--artifact-dir", art, "--baseline-dir", basedir,
+                 "--update"]) == 0
+    assert main(gate) == 0
+
+    # a 30% wall-clock regression fails at the default 25% tolerance
+    _write(os.path.join(art, "BENCH_sim.json"),
+           {"paper-fig3": {"wallclock_s": 1.3, "final_loss": 5.0}})
+    assert main(gate) == 1
+    # ... passes with a looser tolerance
+    assert main(gate + ["--tolerance", "0.5"]) == 0
+    # non-gated metrics may move freely
+    _write(os.path.join(art, "BENCH_sim.json"),
+           {"paper-fig3": {"wallclock_s": 1.1, "final_loss": 500.0}})
+    assert main(gate) == 0
+
+    # dropping a gated metric from the artifact fails (schema rot)
+    _write(os.path.join(art, "BENCH_sim.json"),
+           {"paper-fig3": {"final_loss": 5.0}})
+    assert main(gate) == 1
+
+    # a missing artifact file fails
+    os.remove(os.path.join(art, "BENCH_sim.json"))
+    assert main(gate) == 1
+
+
+def test_gate_covers_full_canonical_set(tmp_path):
+    """A deleted/never-committed baseline must FAIL the un-named gate, not
+    silently un-gate that perf surface."""
+    art = str(tmp_path / "artifacts")
+    basedir = str(tmp_path / "baselines")
+    for name in ("BENCH_sim.json", "BENCH_comm.json", "BENCH_trace.json"):
+        _write(os.path.join(art, name), {"s": {"wallclock_s": 1.0}})
+    assert main(["--artifact-dir", art, "--baseline-dir", basedir,
+                 "--update"]) == 0
+    assert main(["--artifact-dir", art, "--baseline-dir", basedir]) == 0
+    os.remove(os.path.join(basedir, "BENCH_trace.json"))
+    assert main(["--artifact-dir", art, "--baseline-dir", basedir]) == 1
+
+
+def test_zero_baseline_carries_no_signal(tmp_path):
+    art = str(tmp_path / "a")
+    basedir = str(tmp_path / "b")
+    _write(os.path.join(basedir, "BENCH_sim.json"),
+           {"s": {"wallclock_s": 0.0}})
+    _write(os.path.join(art, "BENCH_sim.json"),
+           {"s": {"wallclock_s": 123.0}})
+    assert main(["--artifact-dir", art, "--baseline-dir", basedir,
+                 "BENCH_sim.json"]) == 0
