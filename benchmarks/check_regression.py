@@ -35,7 +35,8 @@ import sys
 
 ARTIFACT_DIR = "benchmarks/artifacts"
 BASELINE_DIR = "benchmarks/baselines"
-BENCH_FILES = ("BENCH_sim.json", "BENCH_comm.json", "BENCH_trace.json")
+BENCH_FILES = ("BENCH_sim.json", "BENCH_comm.json", "BENCH_trace.json",
+               "BENCH_fused.json")
 
 # deterministic, smaller-is-better metric keys (matched on the LAST path
 # segment). Anything not matched here is informational, never gated —
@@ -51,6 +52,13 @@ GATED_KEY_RES = (
     r"^bits_per_param(_mean)?$",
     r"^bits_(access|fronthaul)_total$",
     r"^flop_ratio$",
+    # fused sync: traced launch counts are deterministic; the steady-state
+    # wall-clock is gated as the SAME-RUN fused/topk-flat ratio (the two
+    # paths share each round-robin iteration, so host speed cancels —
+    # absolute ms and the leaf ratio stay informational, per the XLA-CPU
+    # TopK caveat in benchmarks/fused_sync.py)
+    r"^fused_(topk|scatter)_launches$",
+    r"^fused_over_topk$",
     # comm: per-codec bits/param live under bits_per_param/<codec>/<phi>
     r"^\d+(\.\d+)?$",
 )

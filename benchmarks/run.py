@@ -94,20 +94,29 @@ def bench_dgc_kernel():
     return out
 
 
-def bench_fused_sync(omega_impl="topk"):
-    """Flat-buffer whole-model sync vs leaf-wise reference: top-k/collective
-    launches per sync (1 per hop vs 1 per leaf), build + steady-state time,
-    and Ω selection fidelity."""
-    from benchmarks.fused_sync import run
-    return [
+def bench_fused_sync():
+    """Fused vs topk-flat vs leaf-wise sync: top-k/scatter launches per
+    sync, donated-jit steady-state, Ω selection fidelity. Writes
+    BENCH_fused.json (launch counts gated by check_regression)."""
+    from benchmarks.fused_sync import artifact, run
+    rows = run()
+    os.makedirs("benchmarks/artifacts", exist_ok=True)
+    path = "benchmarks/artifacts/BENCH_fused.json"
+    with open(path, "w") as f:
+        json.dump(artifact(rows), f, indent=1, default=float)
+    out = [
         (f"sync/{tag}",
-         f"topk={m['leaf_topk']}->{m['flat_topk']},"
-         f"scatter={m['leaf_scatter']}->{m['flat_scatter']},"
-         f"build={m['leaf_build_s']:.2f}s->{m['flat_build_s']:.2f}s,"
-         f"steady={m['leaf_ms']:.1f}ms->{m['flat_ms']:.1f}ms,"
-         f"omega_fidelity={m['fidelity_leaf']:.4f}->{m['fidelity_flat']:.4f}")
-        for tag, m in run(omega_impl=omega_impl)
+         f"topk_launches={m['leaf_topk_launches']}->"
+         f"{m['flat_topk_launches']}->{m['fused_topk_launches']},"
+         f"scatter={m['leaf_scatter_launches']}->"
+         f"{m['flat_scatter_launches']}->{m['fused_scatter_launches']},"
+         f"steady(leaf/topk/fused)={m['leaf_ms']:.0f}/"
+         f"{m['flat_topk_ms']:.0f}/{m['fused_ms']:.0f}ms,"
+         f"mask_identical={m['fused_mask_identical']}")
+        for tag, m in rows
     ]
+    out.append(("sync/artifact", path))
+    return out
 
 
 def bench_comm():
@@ -170,9 +179,6 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--omega-impl", default="topk",
-                    choices=["topk", "hist", "pallas"],
-                    help="Ω selection impl for the fused-sync benchmark")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(ALL)
     failures = 0
@@ -182,8 +188,6 @@ def main() -> None:
         try:
             if name == "table3":
                 rows = fn(fast=not args.full)
-            elif name == "sync":
-                rows = fn(omega_impl=args.omega_impl)
             else:
                 rows = fn()
         except Exception as e:  # pragma: no cover

@@ -181,12 +181,21 @@ class HFLConfig:
     sync_mode: str = "sparse"  # dense | sparse (paper) | quantized_sparse (beyond)
     # Ω selection implementation for the sync payloads:
     #   topk (exact lax.top_k) | hist (jnp histogram threshold) |
-    #   pallas (kernels/dgc hist passes)
+    #   pallas (kernels/dgc hist passes) | fused (kernels/fused_sync —
+    #   threshold+mask+compaction in one pass, selection bit-identical
+    #   to topk without its whole-vector sort)
     omega_impl: str = "topk"
     # sync buffer layout: "flat" runs the paper's whole-model Ω once per
     # sync over one contiguous vector (one top-k + one all-gather + one
     # scatter-add); "leaf" is the legacy per-pytree-leaf reference path.
     sync_layout: str = "flat"
+    # in-pod shard count of the padded flat vector under omega_impl=
+    # "fused": > 1 splits the vector into that many contiguous pieces
+    # with per-shard fused compaction and one candidate all-gather (the
+    # single-process emulation of the ("data","model") mesh sharding; on
+    # a pod-less mesh with >1 data*model extent the mesh path activates
+    # automatically and this knob is ignored)
+    flat_shards: int = 1
     # wire value format under quantized_sparse: bf16 (historical) or q8
     # (8-bit linear quantization; the error feeds back through eps/e like
     # the sparsification error — see core.hfl._wire_round)

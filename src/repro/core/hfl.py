@@ -152,11 +152,23 @@ def _wire_round(x, fmt: str):
         bit-identical to the host codec (``repro.comm.codecs`` q8 formats),
         and the quantization error lands in the same ``eps``/``e`` error
         buffers as the sparsification error.
+
+    On a 1-D payload this is the single-cluster case of
+    ``_wire_round_rows`` (the last-axis q8 scale IS the whole-payload
+    scale), so it simply delegates — one copy of the wire rule.
     """
+    return _wire_round_rows(x, fmt)
+
+
+def _wire_round_rows(x, fmt: str):
+    """Row-batched wire rounding: each leading-axis row is one cluster's
+    payload, so the q8 scale reduces over the LAST axis only —
+    bit-identical to looping ``_wire_round`` over rows (the fused sync
+    batches the N uplink hops)."""
     if fmt == "bf16":
         return x.astype(jnp.bfloat16).astype(jnp.float32)
     if fmt == "q8":
-        amax = jnp.max(jnp.abs(x))
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
         scale = jnp.where(amax > 0, amax / jnp.float32(127.0), jnp.float32(1.0))
         return jnp.clip(jnp.round(x / scale), -127.0, 127.0) * scale
     raise ValueError(fmt)
@@ -284,6 +296,316 @@ def _flat_shard_sync(params, w_ref, eps, e, *, hfl_cfg, wire):
         fl.unpack_stacked(jnp.stack(eps_rows), eps_spec),
         fl.unpack(new_e, ref_spec),
     )
+
+
+# ---- fused flat layout: batched whole-model Ω via kernels/fused_sync ------
+
+
+def _unpack_ref_outputs(new_wref, ref_spec, state: HFLState):
+    """f32 flat reference -> (params, w_ref) trees WITHOUT routing params
+    through the (possibly bf16) w_ref storage dtype: each leaf is cast
+    straight f32 -> its own dtype, exactly like the unfused paths."""
+    wref_leaves = [
+        new_wref[ref_spec.leaf_slice(i)].reshape(ref_spec.shapes[i])
+        for i in range(len(ref_spec.sizes))
+    ]
+    wref_tree_f32 = jax.tree.unflatten(ref_spec.treedef, wref_leaves)
+    params = jax.tree.map(
+        lambda w, p: jnp.broadcast_to(w.astype(p.dtype)[None], p.shape),
+        wref_tree_f32,
+        state.params,
+    )
+    w_ref = jax.tree.map(
+        lambda w, r: w.astype(r.dtype), wref_tree_f32, state.w_ref
+    )
+    return params, w_ref
+
+
+def _pack_drift(state: HFLState, beta_s: float, *, shards: int = 1):
+    """[N, Q'] drift matrix s = wn - wref + β_s·eps built leaf-by-leaf in
+    ONE concat — the packed params/eps matrices are never materialized
+    separately, halving the [N, Q]-sized traffic of the sync prologue."""
+    N = jax.tree.leaves(state.params)[0].shape[0]
+    p_leaves = jax.tree.leaves(state.params)
+    wr_leaves = jax.tree.leaves(state.w_ref)
+    eps_leaves = jax.tree.leaves(state.eps)
+    s = jnp.concatenate(
+        [
+            (p.reshape(N, -1).astype(jnp.float32)
+             - w.reshape(-1).astype(jnp.float32)[None, :])
+            + beta_s * ep.reshape(N, -1).astype(jnp.float32)
+            for p, w, ep in zip(p_leaves, wr_leaves, eps_leaves)
+        ],
+        axis=1,
+    )
+    # spec from eps: the unpacked drift residual must keep eps' storage
+    # dtype (params may be a different dtype than the error buffers)
+    spec = fl.spec_of_stacked(state.eps, shards=shards)
+    if spec.pad:
+        s = jnp.pad(s, ((0, 0), (0, spec.pad)))
+    return s, spec
+
+
+def _scatter_rows(idx, vals, L: int):
+    """Dense [N, L] matrix with ``out[n, idx[n, j]] += vals[n, j]``, as
+    ONE flat 1-D scatter (a 2-D scatter serializes on XLA-CPU). Pad/
+    out-of-range entries carry vals == 0, so clipping them is a numeric
+    no-op."""
+    N = idx.shape[0]
+    flat_idx = (jnp.minimum(idx, L - 1)
+                + (jnp.arange(N, dtype=jnp.int32) * L)[:, None]).reshape(-1)
+    return (
+        jnp.zeros((N * L,), jnp.float32)
+        .at[flat_idx]
+        .add(vals.reshape(-1))
+        .reshape(N, L)
+    )
+
+
+def _make_flat_fused_local_sync(hfl_cfg, wire):
+    """Single-process whole-vector sync via the fused select kernel.
+
+    Protocol-identical to ``_make_flat_local_sync`` (selection is
+    bit-identical to ``omega_impl="topk"``), restructured for the fused
+    path's batched shape: the N uplink Ωs run as ONE ``select_topk_rows``
+    call (one finisher top-k for all clusters), all N sent rows
+    materialize through a single flat scatter-add, and the error/
+    consensus updates stay dense fusable arithmetic — so a sync traces
+    2 top-k and 2 scatter-add launches regardless of N or the leaf
+    count (vs one of each per leaf per hop on the legacy path).
+    """
+    from repro.kernels.fused_sync import ops as fops
+
+    N = hfl_cfg.num_clusters
+
+    def flat_sync(state: HFLState):
+        wref, ref_spec = fl.pack(state.w_ref)
+        e, _ = fl.pack(state.e)
+        Q = ref_spec.total
+        s, eps_spec = _pack_drift(state, hfl_cfg.beta_s)
+
+        # --- SBS side: batched whole-vector Ω uplinks (Alg.5 l.24-27) ---
+        k_ul = sp.keep_count(Q, hfl_cfg.phi_sbs_ul)
+        vals, idx = fops.select_topk_rows(s, k_ul)  # [N, k]
+        if wire:
+            vals = _wire_round_rows(vals, wire)
+        # ONE flat scatter materializes all N sent rows; the error update
+        # and the consensus mean stay dense elementwise ops XLA fuses
+        sents = _scatter_rows(idx, vals, Q)
+        new_eps = s - sents
+
+        # --- MBS side: consensus + discounted error + Ω downlink ---
+        delta = jnp.mean(sents, axis=0) + hfl_cfg.beta_m * e
+        k_dl = sp.keep_count(Q, hfl_cfg.phi_mbs_dl)
+        dvals, didx = fops.select_topk_rows(delta[None, :], k_dl)
+        dvals, didx = dvals[0], didx[0]
+        if wire:
+            dvals = _wire_round(dvals, wire)
+        d = jnp.zeros((Q,), jnp.float32).at[didx].add(dvals)
+        new_e = delta - d
+        new_wref = wref + d
+
+        # --- clusters adopt the new reference (Alg.5 l.33/43) ---
+        params, w_ref = _unpack_ref_outputs(new_wref, ref_spec, state)
+        return state._replace(
+            params=params,
+            w_ref=w_ref,
+            eps=fl.unpack_stacked(new_eps, eps_spec),
+            e=fl.unpack(new_e, ref_spec),
+        )
+
+    return flat_sync
+
+
+# ---- sharded flat layout: the vector itself shards over (data, model) -----
+
+
+def _sharded_select(s, k: int, S: int, L: int, size: int, *, gathered=None):
+    """Shared stage-1+merge of the sharded whole-vector Ω.
+
+    ``s`` [R, S*L] (local emulation) runs every shard's stage-1 locally;
+    a mesh body instead passes ``gathered`` = (cand_vals, cand_idx, m,
+    th) already stacked shard-major [S, R, ...] from its all-gather. The
+    merge is identical either way, so the mesh execution and the local
+    emulation are bit-identical. Returns (vals [R, k], idx [R, k], exact).
+    """
+    from repro.kernels.fused_sync import ops as fops
+
+    if gathered is None:
+        parts = []
+        for sh in range(S):
+            sl = s[:, sh * L:(sh + 1) * L]
+            v, i, m, th = fops.shard_select_candidates(sl, k, S)
+            gi = jnp.where(i < L, i + sh * L, size)
+            parts.append((v, gi, m, th))
+        cand_v = jnp.stack([p[0] for p in parts])  # [S, R, cap_s]
+        cand_i = jnp.stack([p[1] for p in parts])
+        m = jnp.stack([p[2] for p in parts])  # [S, R]
+        th = jnp.stack([p[3] for p in parts])
+    else:
+        cand_v, cand_i, m, th = gathered
+    R = cand_v.shape[1]
+    cand_v = jnp.transpose(cand_v, (1, 0, 2)).reshape(R, -1)  # shard-major
+    cand_i = jnp.transpose(cand_i, (1, 0, 2)).reshape(R, -1)
+    return fops.merge_shard_candidates(
+        cand_v, cand_i, jnp.transpose(m), jnp.transpose(th), k
+    )
+
+
+def _make_flat_sharded_local_sync(hfl_cfg, wire, shards: int):
+    """Single-process emulation of the sharded flat sync: the padded flat
+    vector is treated as ``shards`` contiguous pieces, stage-1 candidate
+    selection runs per piece, and the merge finishes the whole-vector Ω —
+    the exact dataflow of the mesh path (``_make_flat_sharded_sync``)
+    with the all-gather replaced by a stack, so the two are bit-identical
+    (the sharded-vs-unsharded equivalence tests run on this path).
+    """
+    N, S = hfl_cfg.num_clusters, shards
+
+    def sharded_sync(state: HFLState):
+        wref, ref_spec = fl.pack(state.w_ref, shards=S)
+        e, _ = fl.pack(state.e, shards=S)
+        Q, Qp = ref_spec.total, ref_spec.padded_total
+        L = ref_spec.local_size
+        s, eps_spec = _pack_drift(state, hfl_cfg.beta_s, shards=S)
+
+        k_ul = sp.keep_count(Q, hfl_cfg.phi_sbs_ul)
+        # the exactness certificate is intentionally advisory here: when a
+        # shard overflows its candidate capacity the merged union top-k is
+        # used as-is (deterministic, documented in merge_shard_candidates)
+        # because the mesh body cannot fall back to a whole-vector sort —
+        # and the emulation must stay bit-equivalent to the mesh
+        vals, idx, _exact = _sharded_select(s, k_ul, S, L, Qp)
+        if wire:
+            vals = _wire_round_rows(vals, wire)
+        sents = _scatter_rows(idx, vals, Qp)
+        new_eps = s - sents
+        delta = jnp.mean(sents, axis=0) + hfl_cfg.beta_m * e
+
+        k_dl = sp.keep_count(Q, hfl_cfg.phi_mbs_dl)
+        dvals, didx, _exact_d = _sharded_select(delta[None, :], k_dl, S, L, Qp)
+        dvals, didx = dvals[0], didx[0]
+        if wire:
+            dvals = _wire_round(dvals, wire)
+        d = _scatter_rows(didx[None, :], dvals[None, :], Qp)[0]
+        new_e = delta - d
+        new_wref = wref + d
+
+        params, w_ref = _unpack_ref_outputs(new_wref, ref_spec, state)
+        return state._replace(
+            params=params,
+            w_ref=w_ref,
+            eps=fl.unpack_stacked(new_eps, eps_spec),
+            e=fl.unpack(new_e, ref_spec),
+        )
+
+    return sharded_sync
+
+
+def _make_flat_sharded_sync(hfl_cfg, wire, mesh):
+    """Mesh path: the padded flat vector shards over the in-pod
+    ("data", "model") axes inside a fully-manual shard_map.
+
+    Each device holds ONE contiguous piece [N, L] of the drift matrix,
+    runs the fused per-shard compaction on it, and exchanges only the
+    compacted (values, indices) candidate payloads in a single
+    all-gather (~1.3k entries, not Q) — the 100B-class configs never
+    materialize the whole flat vector per device. The merge is
+    replicated math over the gathered candidates, so every device
+    computes identical payloads and scatters only its own slice.
+    """
+    N = hfl_cfg.num_clusters
+    axes = tuple(
+        a for a in ("data", "model")
+        if a in mesh.axis_names and mesh.shape[a] > 1
+    )
+    S = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    assert S > 1, "sharded flat sync needs a >1 (data, model) mesh extent"
+    P = jax.sharding.PartitionSpec
+    from repro.kernels.fused_sync import ops as fops
+
+    def gather_shard_major(t):
+        # innermost axis first, so the stacked leading axis ends up
+        # data-major — matching P(axes)'s contiguous shard order
+        for a in reversed(axes):
+            t = jax.lax.all_gather(t, a)
+        return t.reshape((S,) + t.shape[len(axes):])
+
+    def shard_offset(L):
+        lin = jnp.int32(0)
+        for a in axes:
+            lin = lin * mesh.shape[a] + jax.lax.axis_index(a)
+        return lin * L
+
+    def body(s, wref, e, *, Q, Qp, L):
+        # s [N, L]; wref/e [L] — this device's contiguous piece
+        k_ul = sp.keep_count(Q, hfl_cfg.phi_sbs_ul)
+        off = shard_offset(L)
+        v, i, m, th = fops.shard_select_candidates(s, k_ul, S)
+        gi = jnp.where(i < L, i + off, Qp)
+        gathered = tuple(
+            gather_shard_major(t) for t in (v, gi, m, th)
+        )  # [S, N, cap_s] / [S, N]
+        vals, idx, _exact = _sharded_select(
+            None, k_ul, S, L, Qp, gathered=gathered
+        )
+        if wire:
+            vals = _wire_round_rows(vals, wire)
+        # scatter only the indices living on THIS shard (others no-op)
+        loc = idx - off
+        inb = (loc >= 0) & (loc < L)
+        sents = _scatter_rows(
+            jnp.where(inb, loc, L - 1), jnp.where(inb, vals, 0.0), L
+        )
+        new_eps = s - sents
+        delta = jnp.mean(sents, axis=0) + hfl_cfg.beta_m * e
+
+        k_dl = sp.keep_count(Q, hfl_cfg.phi_mbs_dl)
+        dv, di, dm, dth = fops.shard_select_candidates(delta[None, :], k_dl, S)
+        dgi = jnp.where(di < L, di + off, Qp)
+        dg = tuple(gather_shard_major(t) for t in (dv, dgi, dm, dth))
+        dvals, didx, _exact_d = _sharded_select(
+            None, k_dl, S, L, Qp, gathered=dg
+        )
+        dvals, didx = dvals[0], didx[0]
+        if wire:
+            dvals = _wire_round(dvals, wire)
+        dloc = didx - off
+        dinb = (dloc >= 0) & (dloc < L)
+        d = _scatter_rows(
+            jnp.where(dinb, dloc, L - 1)[None, :],
+            jnp.where(dinb, dvals, 0.0)[None, :],
+            L,
+        )[0]
+        new_e = delta - d
+        new_wref = wref + d
+        return new_eps, new_wref, new_e
+
+    def sharded_sync(state: HFLState):
+        wref, ref_spec = fl.pack(state.w_ref, shards=S)
+        e, _ = fl.pack(state.e, shards=S)
+        Q, Qp, L = ref_spec.total, ref_spec.padded_total, ref_spec.local_size
+        s, eps_spec = _pack_drift(state, hfl_cfg.beta_s, shards=S)
+        vec = P(axes if len(axes) > 1 else axes[0])
+        mat = P(None, *vec)
+        s = jax.lax.with_sharding_constraint(
+            s, jax.sharding.NamedSharding(mesh, mat))
+        sm = jaxcompat.shard_map(
+            partial(body, Q=Q, Qp=Qp, L=L),
+            mesh=mesh,
+            in_specs=(mat, vec, vec),
+            out_specs=(mat, vec, vec),
+        )
+        new_eps, new_wref, new_e = sm(s, wref, e)
+        params, w_ref = _unpack_ref_outputs(new_wref, ref_spec, state)
+        return state._replace(
+            params=params,
+            w_ref=w_ref,
+            eps=fl.unpack_stacked(new_eps, eps_spec),
+            e=fl.unpack(new_e, ref_spec),
+        )
+
+    return sharded_sync
 
 
 # ---- leaf layout: legacy per-tensor Ω, kept as the reference path ---------
@@ -427,6 +749,21 @@ def make_sync_step(hfl_cfg, mesh=None, param_specs=None, *, layout=None):
 
     ``layout`` overrides ``hfl_cfg.sync_layout`` ("flat" whole-model Ω —
     the default — or the legacy "leaf" reference path).
+
+    Flat-layout routing by Ω impl and mesh:
+
+      * ``omega_impl="fused"`` + no mesh: the batched fused local sync
+        (2 top-k + 2 scatter-add launches per sync, selection
+        bit-identical to ``topk``). With ``hfl_cfg.flat_shards > 1`` the
+        padded flat vector is processed as that many contiguous shards —
+        the single-process emulation of the mesh-sharded path.
+      * ``omega_impl="fused"`` + a pod-less mesh with >1 ("data",
+        "model") extent: the flat vector itself shards over those axes
+        (``_make_flat_sharded_sync``) — per-shard fused compaction, one
+        all-gather of compacted candidates, no whole-vector
+        materialization per device.
+      * other impls keep their historical paths (local whole-vector, or
+        the per-device "pod" shard_map on pod meshes).
     """
     mode = hfl_cfg.sync_mode
     if mode == "dense":
@@ -460,7 +797,26 @@ def make_sync_step(hfl_cfg, mesh=None, param_specs=None, *, layout=None):
     if not has_pod:
         # Single-pod / CPU path: emulate the cluster axis locally. The
         # protocol still follows Alg.5 exactly; the "exchange" is a local sum.
+        flat_shards = int(getattr(hfl_cfg, "flat_shards", 1))
         if layout == "flat":
+            fused = hfl_cfg.omega_impl == "fused"
+            if mesh is not None and fused:
+                span = int(np.prod([
+                    mesh.shape[a] for a in ("data", "model")
+                    if a in mesh.axis_names
+                ]))
+                if span > 1:
+                    return _make_flat_sharded_sync(hfl_cfg, wire, mesh)
+            if flat_shards > 1:
+                if not fused:
+                    raise ValueError(
+                        "flat_shards > 1 requires omega_impl='fused' (the "
+                        "sharded flat sync is built on the fused per-shard "
+                        "compaction)")
+                return _make_flat_sharded_local_sync(hfl_cfg, wire,
+                                                     flat_shards)
+            if fused:
+                return _make_flat_fused_local_sync(hfl_cfg, wire)
             return _make_flat_local_sync(hfl_cfg, wire)
         return _make_leaf_local_sync(hfl_cfg, wire)
 

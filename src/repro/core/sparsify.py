@@ -7,6 +7,9 @@ zeroes the rest. Two selection implementations:
   * ``hist``  -- histogram threshold estimation (TPU adaptation of DGC's
                  sampled radix-select; the Pallas kernel in
                  ``repro.kernels.dgc`` implements the same two-pass scheme)
+  * ``fused`` -- exact top-k via the fused threshold/mask/compaction
+                 kernel (``repro.kernels.fused_sync``): bit-identical
+                 selection to ``topk`` without the whole-vector TopK sort
 
 All functions operate on a single array (a leaf or a flat vector); pytree
 orchestration lives in ``repro.core.hfl``.
@@ -92,6 +95,13 @@ def omega(v, phi: float, *, impl: str = "topk"):
         from repro.kernels.dgc import ops as _k
 
         return _k.omega_pallas(v, phi)
+    elif impl == "fused":
+        from repro.kernels.fused_sync import ops as _f
+
+        vals, idx = _f.fused_pack_phi(v, phi)
+        flat_mask = jnp.zeros((v.size,), bool).at[idx].set(True)
+        mask = flat_mask.reshape(v.shape)
+        return v * mask.astype(v.dtype), mask
     else:
         raise ValueError(impl)
     return v * mask.astype(v.dtype), mask
@@ -168,11 +178,18 @@ def pack_phi(x, phi: float, *, impl: str = "topk", bins: int = 64):
       * ``hist``   -- jnp histogram threshold + O(Q) compaction
       * ``pallas`` -- threshold from the Pallas DGC hist kernels
                       (``repro.kernels.dgc``) + O(Q) compaction
+      * ``fused``  -- the fused threshold/mask/compaction kernel
+                      (``repro.kernels.fused_sync``): selection
+                      bit-identical to ``topk`` without its full sort
     """
     flat = x.reshape(-1)
     k = keep_count(flat.size, phi)
     if impl == "topk":
         return pack_topk(flat, k)
+    if impl == "fused":
+        from repro.kernels.fused_sync import ops as _f
+
+        return _f.fused_pack_phi(flat, phi, bins=bins)
     if impl == "hist":
         mask = threshold_mask(flat, phi, bins=bins)
     elif impl == "pallas":

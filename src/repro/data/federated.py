@@ -84,6 +84,22 @@ class ResidencyTracker:
         """Resident shard count per cluster [N]."""
         return self.holds.sum(axis=1)
 
+    def copy_counts(self) -> np.ndarray:
+        """Holder count per MU [K] (>= 1; > 1 only under ``duplicate``)."""
+        return self.holds.sum(axis=0)
+
+    def shard_weights(self) -> np.ndarray:
+        """Gradient weight per MU shard [K]: ``1 / n_copies``.
+
+        Under ``duplicate`` the copies of a shard train independently in
+        every holder cluster; entering each cluster's gradient at full
+        weight counts that MU's data ``n_copies`` times in the cluster
+        sum, skewing the effective data distribution toward mobile MUs.
+        Weighting each copy's batch rows by ``1/n_copies`` conserves it
+        (``move``/``stale`` always weight 1).
+        """
+        return 1.0 / np.maximum(self.copy_counts(), 1)
+
     def check_conservation(self) -> None:
         """Raise if a shard was lost (all policies), double-counted
         (``move``/``stale``, which promise exactly one holder per MU), or —

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel fusing Ω threshold application, mask and compaction.
+
+PR 1's flat-buffer sync still ran selection as XLA ``top_k`` → gather →
+pack: a full sort-based pass over the whole flat vector per hop. This
+kernel replaces it with the DGC-style dataflow (threshold from the
+``kernels/dgc`` ``tail_hist`` machinery, then one streaming pass):
+
+  ``block_select`` : per grid block, ``|x| >= th`` entries are packed into
+                     ``CAP_BLK`` fixed slots — (values, GLOBAL indices) —
+                     in index order, plus the true per-block candidate
+                     count. One HBM->VMEM pass; the in-block compaction is
+                     a flattened cumsum + bounded scatter, all VPU work.
+
+The per-block candidate lists need no cross-block offsets: downstream the
+exact-k finisher (``ops.select_topk_rows``) runs a SMALL top-k over the
+``nb * CAP_BLK`` candidate buffer, where pad slots (value 0, index n) can
+never beat a real candidate (candidates obey ``|x| >= th >= tiny > 0``).
+Per-block counts feed the exactness predicate: a block that overflowed
+``CAP_BLK`` may have dropped a top-k entry, so the caller falls back to
+the exact path.
+
+Blocks are (64, 1024) f32 tiles — smaller than the dgc kernels' (256,
+1024) so the in-kernel cumsum stays cheap — streaming HBM->VMEM once.
+Validated against ``ref.py`` in interpret mode (this container is
+CPU-only; TPU is the compile target).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BLOCK_ROWS = 64  # (64, 1024) f32 tile = 256 KB per operand
+BLOCK_COLS = 8 * LANES  # 1024
+BLOCK_ELEMS = BLOCK_ROWS * BLOCK_COLS
+
+
+def _grid(rows):
+    return (rows // BLOCK_ROWS,)
+
+
+def _select_kernel(th_ref, x_ref, vals_out, idx_out, count_out, *, cap_blk, n):
+    i = pl.program_id(0)
+    th = th_ref[0, 0]
+    x = x_ref[...].reshape(1, BLOCK_ELEMS)  # row-major == index order
+    m = jnp.abs(x) >= th
+    pos = jnp.cumsum(m.astype(jnp.int32), axis=1) - 1
+    # surplus candidates (pos >= cap_blk) and non-candidates land on the
+    # out-of-bounds slot and are dropped by the bounded scatter
+    tgt = jnp.where(m & (pos < cap_blk), pos, cap_blk)[0]
+    base = i * BLOCK_ELEMS
+    iota = base + jax.lax.broadcasted_iota(jnp.int32, (1, BLOCK_ELEMS), 1)[0]
+    vals_out[...] = (
+        jnp.zeros((1, cap_blk), jnp.float32)
+        .at[0, tgt]
+        .set(x[0], mode="drop")
+    )
+    idx_out[...] = (
+        jnp.full((1, cap_blk), n, jnp.int32).at[0, tgt].set(iota, mode="drop")
+    )
+    count_out[0, 0] = jnp.sum(m.astype(jnp.int32))
+
+
+def block_select(x_tiles, th, cap_blk: int, n: int, *, interpret=True):
+    """x_tiles [R, BLOCK_COLS] f32; th scalar -> per-block compacted
+    (vals [nb, cap_blk], GLOBAL idx [nb, cap_blk] int32 with ``n`` as the
+    pad slot, counts [nb, 1] int32). ``n`` is the unpadded length (pad
+    entries are zeros and must sit below ``th``)."""
+    R = x_tiles.shape[0]
+    nb = R // BLOCK_ROWS
+    thr = jnp.asarray(th, jnp.float32).reshape(1, 1)
+    blk = pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_select_kernel, cap_blk=cap_blk, n=n),
+        grid=_grid(R),
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)), blk],
+        out_specs=[
+            pl.BlockSpec((1, cap_blk), lambda i: (i, 0)),
+            pl.BlockSpec((1, cap_blk), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, cap_blk), jnp.float32),
+            jax.ShapeDtypeStruct((nb, cap_blk), jnp.int32),
+            jax.ShapeDtypeStruct((nb, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(thr, x_tiles)

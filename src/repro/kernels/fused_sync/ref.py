@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the fused-sync Pallas kernel (same semantics)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def block_select_ref(x, th, cap_blk, block_elems):
+    """Per-block threshold compaction of a flat vector.
+
+    Splits ``x`` (already padded to a multiple of ``block_elems``) into
+    blocks; within each block, the entries with ``|x| >= th`` are packed
+    into ``cap_blk`` fixed slots in index order (surplus truncated, spare
+    slots hold value 0 / index ``x.size``). Returns
+
+      * vals   [nb, cap_blk]  selected values
+      * idx    [nb, cap_blk]  GLOBAL indices (int32; ``x.size`` = pad slot)
+      * counts [nb]           true per-block candidate counts (pre-truncation)
+    """
+    n = x.size
+    nb = n // block_elems
+    xb = x.reshape(nb, block_elems)
+    m = jnp.abs(xb) >= th
+    pos = jnp.cumsum(m.astype(jnp.int32), axis=1) - 1
+    tgt = jnp.where(m & (pos < cap_blk), pos, cap_blk)
+    base = (jnp.arange(nb, dtype=jnp.int32) * block_elems)[:, None]
+    iota = base + jnp.arange(block_elems, dtype=jnp.int32)[None, :]
+    idx = jnp.full((nb, cap_blk), n, jnp.int32)
+    vals = jnp.zeros((nb, cap_blk), xb.dtype)
+    for b in range(nb):  # oracle clarity over speed
+        idx = idx.at[b, tgt[b]].set(iota[b], mode="drop")
+        vals = vals.at[b, tgt[b]].set(xb[b], mode="drop")
+    counts = jnp.sum(m.astype(jnp.int32), axis=1)
+    return vals, idx, counts

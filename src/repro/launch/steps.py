@@ -44,13 +44,28 @@ def cross_entropy(logits, targets):
 
 
 def make_loss_fn(cfg, groups: int = 1, batch_axes=None):
+    """LM loss over a batch dict. An optional ``row_weight`` leaf [B]
+    scales each row's contribution to the batch-mean loss — the
+    simulator's duplicate-residency policy weights replicated shards'
+    rows by ``1/n_copies`` so the effective data distribution is
+    conserved across the cluster sum. The normalizer stays the ROW COUNT
+    (not the weight sum): renormalizing by ``sum(w)`` would cancel a
+    uniform ``1/c`` inside a cluster and restore the double-counting the
+    weights exist to remove. Weights of 1 are bit-identical to the
+    historical plain mean."""
+
     def loss_fn(params, batch):
         tokens = batch["tokens"]
         fe = batch.get("frontend")
+        rw = batch.get("row_weight")
         with activation_sharding(batch_axes):
             logits, aux = forward(params, tokens, cfg, frontend_embeds=fe, groups=groups)
         T = tokens.shape[1]
-        loss = cross_entropy(logits[:, -T:-1], tokens[:, 1:]).mean()
+        ce = cross_entropy(logits[:, -T:-1], tokens[:, 1:])
+        if rw is None:
+            loss = ce.mean()
+        else:
+            loss = jnp.mean(rw * ce.mean(axis=-1))
         if cfg.num_experts:
             loss = loss + cfg.router_aux_loss_coef * aux
         return loss, aux

@@ -65,12 +65,19 @@ def main(argv=None):
     ap.add_argument("--sync", default="sparse",
                     choices=["dense", "sparse", "quantized_sparse"])
     ap.add_argument("--omega-impl", default="topk",
-                    choices=["topk", "hist", "pallas"],
-                    help="Ω selection implementation for sparse syncs")
+                    choices=["topk", "hist", "pallas", "fused"],
+                    help="Ω selection implementation for sparse syncs "
+                         "(fused = kernels/fused_sync threshold+compaction, "
+                         "selection bit-identical to topk)")
     ap.add_argument("--sync-layout", default="flat", choices=["flat", "leaf"],
                     help="flat = whole-model Ω (paper-exact, one fused "
                          "top-k/collective per sync); leaf = legacy per-leaf "
                          "reference path")
+    ap.add_argument("--flat-shards", type=int, default=1,
+                    help="shard the padded flat vector into this many "
+                         "contiguous pieces (requires --omega-impl fused; "
+                         "single-process emulation of the (data, model) "
+                         "mesh sharding)")
     ap.add_argument("--payload-accounting", default="analytic",
                     choices=["analytic", "measured"],
                     help="analytic = the paper's Q·(1-φ)·bits/param; "
@@ -135,7 +142,7 @@ def main(argv=None):
     hfl = HFLConfig(
         num_clusters=args.clusters, mus_per_cluster=args.mus, period=args.period,
         sync_mode=args.sync, omega_impl=args.omega_impl,
-        sync_layout=args.sync_layout,
+        sync_layout=args.sync_layout, flat_shards=args.flat_shards,
         payload_accounting=args.payload_accounting, codec=args.codec,
         wire_format=args.wire_format,
     )

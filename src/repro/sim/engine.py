@@ -48,7 +48,12 @@ static — MU k always trains in cluster ``k // mus_per_cluster`` — while
 re-association remaps shards under a policy (``move`` / ``duplicate`` /
 ``stale``), and the engine gathers every cluster's batch rows from its
 *resident* MUs' data slots, so cluster gradient distributions actually
-shift as the fleet moves.
+shift as the fleet moves. Under ``duplicate`` the replicated shards'
+rows are weighted ``1/n_copies`` (via the loss's ``row_weight`` leaf) so
+the cluster sum conserves the effective data distribution, and compute
+pricing follows the data too: a resident shard trains at its host MU's
+speed multiplier (``_round_ctx`` / ``_cluster_round_time``), not at the
+radio membership's.
 
 Remaining modelling simplifications (documented, not hidden): the async
 downlink applies the fresh reference densely unless
@@ -513,6 +518,15 @@ class SimEngine:
             deadline_s = self.sim.deadline_factor * float(np.median(finite))
             mask &= r <= deadline_s
 
+        # residency-aware compute placement: the MUs whose shards actually
+        # train this round (the slot sources) set each cluster's compute
+        # time — a shard that moved clusters brings its HOST MU's speed
+        # multiplier along, so straggler behavior follows the data instead
+        # of the (possibly stale) radio membership
+        src = None
+        if self.residency is not None:
+            src = self._slot_sources(None if mask.all() else mask)
+
         # cluster iteration time over the SURVIVING MUs only
         it_n = np.zeros(N)
         for n in range(N):
@@ -536,10 +550,15 @@ class SimEngine:
                     d, m_keep, aux["m_cluster"],
                     B0=lp.B0, Pmax=lp.p_mu, N0=lp.n0,
                     alpha=lp.alpha, ber=lp.ber)
+            if src is not None:
+                trainers = np.unique(src[n][src[n] >= 0])
+                comp_term = comp[trainers].max() if trainers.size else 0.0
+            else:
+                comp_term = comp[members[m_keep]].max()
             it_n[n] = (
                 ul_pay / rates[m_keep].min()
                 + aux["gamma_dl"][n]
-                + comp[members[m_keep]].max()
+                + comp_term
             )
         iter_s = float(it_n.max()) if it_n.max() > 0 else self.sim.base_compute_s
         sync_s = float(aux["theta_u"] + aux["theta_d"] + aux["gamma_dl"].max())
@@ -549,7 +568,7 @@ class SimEngine:
         keep_clusters = np.array(
             [mask[n * mpc:(n + 1) * mpc].any() for n in range(N)]
         )
-        return dict(
+        ctx = dict(
             iter_s=iter_s, sync_s=sync_s,
             mask=None if mask.all() else mask,
             keep_clusters=None if keep_clusters.all() else keep_clusters,
@@ -557,6 +576,13 @@ class SimEngine:
             participants=int(mask.sum()),
             deadline_s=deadline_s,
         )
+        if src is not None:
+            # accounting charges the DISTINCT shards that actually train
+            ctx["src"] = src
+            ctx["participants"] = int(sum(
+                np.unique(row[row >= 0]).size for row in src))
+            ctx["active_clusters"] = int((src[:, 0] >= 0).sum())
+        return ctx
 
     def _advance_fleet(self, dt: float) -> None:
         """Advance positions (waypoint integration or trace replay),
@@ -601,6 +627,13 @@ class SimEngine:
         ``[k // mpc, (k % mpc)*bpm : (k % mpc + 1)*bpm]`` of the generated
         batch). -> (batch, keep) with ``keep`` a bool[N] mask of clusters
         that have resident data (None when all do).
+
+        Under the ``duplicate`` residency policy the gathered batch also
+        carries ``row_weight`` [N, localB]: ``1/n_copies`` of each row's
+        source shard (``ResidencyTracker.shard_weights``), which the loss
+        (``launch.steps.make_loss_fn``) applies as a weighted mean — so a
+        shard replicated into c clusters still contributes one shard's
+        worth of gradient to the cluster sum, not c.
         """
         leaves = jax.tree.leaves(batch)
         if not leaves or leaves[0].ndim < 2:
@@ -618,7 +651,12 @@ class SimEngine:
                + np.tile(np.arange(bpm), (N, mpc)))
         clj, rowj = jnp.asarray(cl), jnp.asarray(row)
         take = lambda leaf: leaf[clj, rowj] if leaf.ndim >= 2 else leaf
-        return jax.tree.map(take, batch), (None if keep.all() else keep)
+        out = jax.tree.map(take, batch)
+        if (isinstance(out, dict) and self.residency is not None
+                and self.residency.policy == "duplicate"):
+            w = np.repeat(self.residency.shard_weights()[srcf], bpm, axis=1)
+            out["row_weight"] = jnp.asarray(w, jnp.float32)
+        return out, (None if keep.all() else keep)
 
     def _gather_row(self, batch, src_n: np.ndarray, n: int):
         """Row-only variant of ``_gather_batch`` for the masked path:
@@ -640,7 +678,12 @@ class SimEngine:
         row = np.repeat((src_n % mpc) * bpm, bpm) + np.tile(np.arange(bpm), mpc)
         clj, rowj = jnp.asarray(cl), jnp.asarray(row)
         take = lambda leaf: leaf[clj, rowj] if leaf.ndim >= 2 else leaf
-        return jax.tree.map(take, batch)
+        out = jax.tree.map(take, batch)
+        if (isinstance(out, dict) and self.residency is not None
+                and self.residency.policy == "duplicate"):
+            w = np.repeat(self.residency.shard_weights()[src_n], bpm)
+            out["row_weight"] = jnp.asarray(w, jnp.float32)
+        return out
 
     def _apply_participation(self, batch, mask: Optional[np.ndarray]):
         """Resample dropped MUs' batch rows from their cluster's survivors."""
@@ -731,17 +774,9 @@ class SimEngine:
         N = self.hfl.num_clusters if self.hfl is not None else None
         for step in range(num_steps):
             if step % H == 0:
+                # _round_ctx draws the slot sources itself (residency runs)
+                # so compute pricing can follow the resident shards
                 ctx = self._round_ctx(deadline)
-                if self.residency is not None:
-                    # resident shards (availability-filtered) decide which
-                    # data each cluster trains on this round; accounting
-                    # charges the DISTINCT shards that actually train, not
-                    # the static radio layout
-                    src = self._slot_sources(ctx["mask"])
-                    ctx["src"] = src
-                    ctx["participants"] = int(sum(
-                        np.unique(row[row >= 0]).size for row in src))
-                    ctx["active_clusters"] = int((src[:, 0] >= 0).sum())
             if self.residency is not None:
                 batch, keep = self._gather_batch(next(it), ctx["src"])
             else:
@@ -770,12 +805,28 @@ class SimEngine:
                     ul_b, dl_b = np.asarray(ul_b, np.float64), float(dl_b)
                     self._count_sync_measured(ul_b, dl_b)
                     aux = self._latency_aux()
+                    # the post-consensus SBS->MU broadcast carries the
+                    # ACTUAL consensus payload (dl_b bits), not the static
+                    # per-iteration sbs_dl estimate: re-price each
+                    # cluster's broadcast leg from its realized DL rate
+                    # and charge the access link for the real bits
+                    # clusters mobility has emptied report dl_rate=inf
+                    # (no broadcast time, no audience): charge neither
+                    # time nor bits for them
+                    finite = np.isfinite(aux["dl_rates"])
+                    t_bcast = np.where(finite, dl_b / aux["dl_rates"], 0.0)
+                    n_bcast = int(finite.sum())
+                    if n_bcast:
+                        bb = self.ledger.record(
+                            "sbs_dl", n_bcast * dl_b, events=n_bcast)
+                        self._bits_access += bb
                     sync_s = float(
                         (ul_b.max() + dl_b) / aux["fh_rate"]
-                        + aux["gamma_dl"].max()
+                        + (t_bcast[finite].max() if n_bcast else 0.0)
                     )
                     row_extra = {"bits_sbs_ul": float(ul_b.sum()),
-                                 "bits_mbs_dl": dl_b}
+                                 "bits_mbs_dl": dl_b,
+                                 "bits_sync_bcast": n_bcast * dl_b}
                 else:
                     self._count_sync(N if N is not None else 1)
                 state = sync_step(state)
@@ -798,7 +849,11 @@ class SimEngine:
         if not self.wireless:
             return self.period * self.sim.base_compute_s
         aux = self._latency_aux()
-        members = self.fleet.cluster_members(n)
+        # compute follows the DATA: with a residency tracker the round's
+        # trainers are the resident shards' host MUs, whose speed
+        # multipliers price the round (radio terms stay with the radio)
+        members = (self.residency.members(n) if self.residency is not None
+                   else self.fleet.cluster_members(n))
         comp_n = comp[members].max() if members.size else self.sim.base_compute_s
         g = aux["gamma_ul"][n] + aux["gamma_dl"][n]
         return float(

@@ -37,6 +37,15 @@ class FlatSpec(NamedTuple):
     For ``pack_stacked`` trees the leading (cluster) axis is *excluded*:
     ``shapes``/``sizes``/``offsets`` describe one row of the ``[N, Q]``
     matrix.
+
+    ``shards``/``pad`` describe the mesh-aware padded layout (``pack``
+    with ``shards > 1``): the flat vector is zero-padded at the tail to
+    ``padded_total = total + pad`` so it divides evenly into ``shards``
+    contiguous pieces — the unit that shards over the in-pod
+    ("data", "model") axes. Offsets never change: shard ``s`` holds
+    global positions ``[s*local_size, (s+1)*local_size)``, so a local
+    index plus the shard offset IS the whole-model index and the
+    compacted (values, indices) exchange needs no translation.
     """
 
     treedef: Any
@@ -45,38 +54,69 @@ class FlatSpec(NamedTuple):
     sizes: Tuple[int, ...]
     offsets: Tuple[int, ...]  # static start offset of each leaf
     total: int  # Q
+    shards: int = 1  # in-pod shard count of the flat vector
+    pad: int = 0  # zero tail entries appended for even sharding
 
     def leaf_slice(self, i: int) -> slice:
         """Static slice of leaf ``i`` inside the flat vector."""
         return slice(self.offsets[i], self.offsets[i] + self.sizes[i])
 
+    @property
+    def padded_total(self) -> int:
+        return self.total + self.pad
 
-def _spec(leaves, treedef, drop_leading: int) -> FlatSpec:
+    @property
+    def local_size(self) -> int:
+        """Per-shard slice length of the padded flat vector."""
+        return self.padded_total // self.shards
+
+    def shard_slice(self, s: int) -> slice:
+        """Static slice of shard ``s`` inside the padded flat vector."""
+        return slice(s * self.local_size, (s + 1) * self.local_size)
+
+
+def _spec(leaves, treedef, drop_leading: int, shards: int = 1) -> FlatSpec:
     shapes = tuple(tuple(l.shape[drop_leading:]) for l in leaves)
     dtypes = tuple(l.dtype for l in leaves)
     sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
     offsets = tuple(int(o) for o in np.cumsum((0,) + sizes)[:-1])
     total = int(sum(sizes))
-    return FlatSpec(treedef, shapes, dtypes, sizes, offsets, total)
+    pad = (-total) % shards if shards > 1 else 0
+    return FlatSpec(treedef, shapes, dtypes, sizes, offsets, total, shards, pad)
 
 
-def spec_of(tree) -> FlatSpec:
+def spec_of(tree, *, shards: int = 1) -> FlatSpec:
     leaves, treedef = jax.tree.flatten(tree)
-    return _spec(leaves, treedef, drop_leading=0)
+    return _spec(leaves, treedef, drop_leading=0, shards=shards)
 
 
-def pack(tree, *, dtype=jnp.float32):
-    """Pytree -> (flat vector [Q] of ``dtype``, FlatSpec)."""
+def spec_of_stacked(tree, *, shards: int = 1) -> FlatSpec:
+    """FlatSpec of a leading-axis-stacked tree without materializing it."""
     leaves, treedef = jax.tree.flatten(tree)
-    spec = _spec(leaves, treedef, drop_leading=0)
+    return _spec(leaves, treedef, drop_leading=1, shards=shards)
+
+
+def pack(tree, *, dtype=jnp.float32, shards: int = 1):
+    """Pytree -> (flat vector [Q'] of ``dtype``, FlatSpec).
+
+    With ``shards > 1`` the vector is zero-padded to ``padded_total`` so
+    it splits into ``shards`` equal contiguous pieces (the mesh-aware
+    layout; see ``FlatSpec``)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    spec = _spec(leaves, treedef, drop_leading=0, shards=shards)
     if not leaves:
         return jnp.zeros((0,), dtype), spec
     vec = jnp.concatenate([l.reshape(-1).astype(dtype) for l in leaves])
+    if spec.pad:
+        vec = jnp.pad(vec, (0, spec.pad))
     return vec, spec
 
 
 def unpack(vec, spec: FlatSpec):
-    """Flat vector [Q] -> pytree, casting leaves back to their dtypes."""
+    """Flat vector [Q or padded_total] -> pytree with original dtypes.
+
+    Leaf offsets all sit below ``total``, so a padded vector unpacks
+    identically — the zero tail is simply ignored."""
     leaves = [
         vec[spec.leaf_slice(i)].reshape(spec.shapes[i]).astype(spec.dtypes[i])
         for i in range(len(spec.sizes))
@@ -84,21 +124,24 @@ def unpack(vec, spec: FlatSpec):
     return jax.tree.unflatten(spec.treedef, leaves)
 
 
-def pack_stacked(tree, *, dtype=jnp.float32):
-    """Pytree with a shared leading axis N -> ([N, Q] matrix, FlatSpec).
+def pack_stacked(tree, *, dtype=jnp.float32, shards: int = 1):
+    """Pytree with a shared leading axis N -> ([N, Q'] matrix, FlatSpec).
 
     Used for the per-cluster ``params``/``eps`` trees ([N, ...] leaves);
     row n is cluster n's flat model, laid out identically to ``pack`` of
-    the axis-free tree (same offsets as ``w_ref``/``e``).
+    the axis-free tree (same offsets as ``w_ref``/``e``, same tail
+    padding under ``shards > 1``).
     """
     leaves, treedef = jax.tree.flatten(tree)
-    spec = _spec(leaves, treedef, drop_leading=1)
+    spec = _spec(leaves, treedef, drop_leading=1, shards=shards)
     if not leaves:
         return jnp.zeros((0, 0), dtype), spec
     n = leaves[0].shape[0]
     mat = jnp.concatenate(
         [l.reshape(n, -1).astype(dtype) for l in leaves], axis=1
     )
+    if spec.pad:
+        mat = jnp.pad(mat, ((0, 0), (0, spec.pad)))
     return mat, spec
 
 

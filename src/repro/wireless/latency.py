@@ -129,12 +129,20 @@ def hfl_latency(
     per_cluster = H * (gamma_ul + gamma_dl)
     gamma_period = per_cluster.max() + theta_u + theta_d + gamma_dl.max()
     per_iter = gamma_period / H
+    # effective per-cluster broadcast rate (bits/s) realized by the
+    # rateless DL model at this payload: callers re-price a broadcast
+    # event carrying b bits as b / dl_rate without re-running the
+    # Monte-Carlo (broadcast time is ~linear in bits at these payloads)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        dl_rates = np.where(gamma_dl > 0, bits_sbs_dl / gamma_dl, np.inf)
     return per_iter, {
         "gamma_ul": gamma_ul, "gamma_dl": gamma_dl,
         "theta_u": theta_u, "theta_d": theta_d,
         # fronthaul rate so callers can re-price θ from per-event measured
         # bit counts without re-running the allocator
         "fh_rate": fh_rate,
+        # per-cluster effective DL broadcast rates (per-event repricing)
+        "dl_rates": dl_rates,
         # per-cluster per-MU UL rates (the simulator's deadline discipline
         # charges each MU its own UL time, not just the cluster min)
         "mu_rates": mu_rates, "m_cluster": m_cluster,

@@ -111,9 +111,11 @@ def test_main_end_to_end(tmp_path):
 def test_gate_covers_full_canonical_set(tmp_path):
     """A deleted/never-committed baseline must FAIL the un-named gate, not
     silently un-gate that perf surface."""
+    from benchmarks.check_regression import BENCH_FILES
+
     art = str(tmp_path / "artifacts")
     basedir = str(tmp_path / "baselines")
-    for name in ("BENCH_sim.json", "BENCH_comm.json", "BENCH_trace.json"):
+    for name in BENCH_FILES:
         _write(os.path.join(art, name), {"s": {"wallclock_s": 1.0}})
     assert main(["--artifact-dir", art, "--baseline-dir", basedir,
                  "--update"]) == 0
@@ -131,3 +133,16 @@ def test_zero_baseline_carries_no_signal(tmp_path):
            {"s": {"wallclock_s": 123.0}})
     assert main(["--artifact-dir", art, "--baseline-dir", basedir,
                  "BENCH_sim.json"]) == 0
+
+
+def test_fused_sync_keys_gated():
+    # deterministic launch counts + the same-run fused/topk steady ratio
+    assert _is_gated("sync/sparse/phi=0.9/N=4/leaves=12/fused_topk_launches")
+    assert _is_gated("sync/sparse/phi=0.9/N=4/leaves=12/"
+                     "fused_scatter_launches")
+    assert _is_gated("sync/sparse/phi=0.99/N=4/leaves=12/fused_over_topk")
+    # absolute host wall-clocks and the leaf ratio stay informational
+    assert not _is_gated("sync/sparse/phi=0.9/N=4/leaves=12/steady_ms/fused")
+    assert not _is_gated("sync/sparse/phi=0.9/N=4/leaves=12/fused_over_leaf")
+    assert not _is_gated("sync/sparse/phi=0.9/N=4/leaves=12/"
+                         "fused_mask_identical")

@@ -445,3 +445,57 @@ def test_engine_async_measured_with_sparse_dl():
     assert m["events_sbs_ul"] >= 3 and m["events_mbs_dl"] >= 3
     # sparse DL payloads are far below the dense adoption's 32·Q bits
     assert m["bits_mbs_dl"] / m["events_mbs_dl"] < 32 * D
+
+
+# ---------------------------------------------------------------------------
+# Per-event DL broadcast repricing (measured mode)
+# ---------------------------------------------------------------------------
+
+
+def test_hfl_latency_exposes_dl_rates():
+    from repro.wireless.latency import hfl_latency
+
+    topo = HCNTopology(num_clusters=3, seed=0)
+    fleet = DeviceFleet(topo, 2, seed=0)
+    lp = LatencyParams(model_params=1e5)
+    _, aux = hfl_latency(topo, fleet.pos, fleet.cid, lp, H=2,
+                         phi_sbs_dl=0.9)
+    bits = lp.payload(0.9)
+    expect = np.where(aux["gamma_dl"] > 0, bits / aux["gamma_dl"], np.inf)
+    np.testing.assert_allclose(aux["dl_rates"], expect)
+    assert np.isfinite(aux["dl_rates"]).any()
+
+
+def test_measured_sync_reprices_broadcast_from_actual_bits():
+    """The sync's SBS->MU broadcast leg must be priced from the ACTUAL
+    encoded consensus payload (per-event dl bits over the realized
+    broadcast rates), not the static per-iteration sbs_dl estimate — and
+    its bits must land in the ledger's sbs_dl link."""
+    hfl, eng = _measured_engine()
+    _, trace = _run(hfl, eng)
+    m = trace.meta
+    rows = [r for r in trace.rows if r["kind"] == "sync"]
+    assert rows and all("bits_sync_bcast" in r for r in rows)
+    aux = eng._latency_aux()
+    finite = np.isfinite(aux["dl_rates"])
+    n_bcast = int(finite.sum())
+    for r in rows:
+        assert r["bits_sync_bcast"] == pytest.approx(
+            n_bcast * r["bits_mbs_dl"])
+        # the broadcast leg is priced from THIS event's dl payload over
+        # the realized rates (the fleet is static, so aux is the round's):
+        # bcast_max <= sync_s <= fronthaul(ul_sum + dl) + bcast_max
+        expect_bcast = (r["bits_mbs_dl"] / aux["dl_rates"][finite]).max()
+        assert r["sync_s"] >= expect_bcast
+        assert r["sync_s"] <= ((r["bits_sbs_ul"] + r["bits_mbs_dl"])
+                               / aux["fh_rate"] + expect_bcast + 1e-12)
+    # ledger: sbs_dl carries both the per-iteration access broadcasts and
+    # the per-sync consensus broadcasts
+    train_launches = m["train_launches"]
+    n_syncs = m["sync_launches"]
+    per_iter = access_bits(hfl.codec, D, hfl.phi_sbs_dl)
+    expected_sbs_dl = (train_launches * hfl.num_clusters * per_iter
+                       + sum(r["bits_sync_bcast"] for r in rows))
+    assert m["bits_sbs_dl"] == pytest.approx(expected_sbs_dl)
+    assert m["events_sbs_dl"] == (train_launches * hfl.num_clusters
+                                  + n_syncs * n_bcast)
