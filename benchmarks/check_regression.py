@@ -10,8 +10,10 @@ tolerance (default 25%).
 
 Gated metrics are the deterministic smaller-is-better ones: virtual
 wall-clock / latency seconds, measured bits per param, total bits on a
-link class, and the masked-step FLOP ratio. Host-dependent numbers
-(encode throughput) and larger-is-better rates are never gated.
+link class, and the masked-step FLOP ratio — plus a short list of
+larger-is-better same-run ratios (``pricing_speedup_100k``), where a DROP
+beyond tolerance fails. Raw host-dependent numbers (encode throughput,
+events/s) are never gated.
 
 A gated baseline key MISSING from the fresh artifact also fails — silently
 dropping a metric is how perf surfaces rot. After an intentional change
@@ -67,16 +69,33 @@ GATED_PARENT_RES = (
     (r"^\d+(\.\d+)?$", r"bits_per_param"),
 )
 
+# deterministic LARGER-is-better keys: a drop beyond tolerance fails. Only
+# same-run host-time ratios qualify (both sides measured in one process, so
+# host speed cancels — the fused_over_topk precedent); raw throughputs stay
+# informational.
+GATED_LARGER_KEY_RES = (
+    r"^pricing_speedup_100k$",
+)
 
-def _is_gated(path: str) -> bool:
+
+def _direction(path: str):
+    """'smaller' / 'larger' for gated metrics, None for informational."""
     key = path.rsplit("/", 1)[-1]
+    for pat in GATED_LARGER_KEY_RES:
+        if re.match(pat, key):
+            return "larger"
     for pat in GATED_KEY_RES:
         if re.match(pat, key):
             for leaf_pat, parent_pat in GATED_PARENT_RES:
                 if re.match(leaf_pat, key):
-                    return re.search(parent_pat, path) is not None
-            return True
-    return False
+                    return ("smaller" if re.search(parent_pat, path)
+                            else None)
+            return "smaller"
+    return None
+
+
+def _is_gated(path: str) -> bool:
+    return _direction(path) is not None
 
 
 def collect(obj, prefix: str = "") -> dict:
@@ -97,7 +116,8 @@ def compare(base: dict, fresh: dict, tol: float):
     scenario/codec whose perf surface is not yet gated — bless it)."""
     regressions, missing, improvements = [], [], []
     for path, b in sorted(base.items()):
-        if not _is_gated(path):
+        direction = _direction(path)
+        if direction is None:
             continue
         if path not in fresh:
             missing.append(path)
@@ -105,7 +125,9 @@ def compare(base: dict, fresh: dict, tol: float):
         f = fresh[path]
         if b <= 0.0:
             continue  # zero/negative baselines carry no regression signal
-        rel = (f - b) / b
+        # regression = growth for smaller-is-better keys, shrinkage for
+        # larger-is-better ones; one signed number covers both
+        rel = (f - b) / b if direction == "smaller" else (b - f) / b
         if rel > tol:
             regressions.append((path, b, f, rel))
         elif rel < -tol:

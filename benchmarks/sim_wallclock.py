@@ -7,9 +7,20 @@ kernel launches (train/sync program invocations), and bytes on the access /
 fronthaul links. The ``scale-100k`` sampling scenario rides along as the
 fleet-scale latency distribution.
 
+Two fleet-scale legs close the artifact: ``scale-1m`` runs the LIVE
+vectorized engine (training + mobility + residency) over a 1.05M-MU fleet
+and records engine throughput (events/s — host-dependent, informational)
+next to the deterministic virtual-clock metrics (gated), and
+``pricing-100k`` times the vectorized 100k-MU pricing sweep against the
+per-object scalar baseline. Their ratio ``pricing_speedup_100k`` is gated
+larger-is-better by ``check_regression``: both sides run in the same
+process, so host speed cancels.
+
   PYTHONPATH=src python -m benchmarks.sim_wallclock
 """
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +35,8 @@ from repro.sim.scenarios import (
     SCENARIOS, apply_hfl_overrides, build_engine, run_scale_sampling,
 )
 from repro.wireless.latency import LatencyParams
+from repro.wireless.qam import optimal_rate_per_subcarrier, optimal_rate_vec
+from repro.wireless.topology import HCNTopology, uniform_disk
 
 TRAIN_SCENARIOS = ("paper-fig3", "stragglers", "mobility", "dropout", "async")
 
@@ -76,7 +89,88 @@ def run(periods: int = 2, seed: int = 0):
         }))
     stats = run_scale_sampling(SCENARIOS["scale-100k"], lp=LatencyParams())
     rows.append(("scale-100k", {k: v for k, v in stats.items() if k != "scenario"}))
+    rows.append(("scale-1m", run_scale_1m(cfg, loss_fn, opt, seed=seed)))
+    rows.append(("pricing-100k", run_pricing_sweep(seed=seed)))
     return rows
+
+
+def run_scale_1m(cfg, loss_fn, opt, periods: int = 2, seed: int = 0):
+    """Live 1.05M-MU engine leg: async training + waypoint mobility +
+    ``move`` residency through the real jitted steps. The virtual-clock and
+    byte metrics are deterministic (gated); events/s is host throughput
+    (informational) — its job is to make a per-MU Python loop sneaking back
+    onto the event hot path visible as a cliff in the artifact history."""
+    scn = SCENARIOS["scale-1m"]
+    hfl = apply_hfl_overrides(scn, HFLConfig())
+    engine = build_engine(scn, hfl, lp=LatencyParams(model_params=1e5),
+                          seed=seed)
+    state = hfl_init(init_model(jax.random.PRNGKey(seed), cfg), opt, hfl)
+    train = jax.jit(make_cluster_train_step(loss_fn, opt, lambda t: 0.1))
+    sync = jit_sync_step(make_sync_step(hfl, mesh=None))
+    rng = np.random.default_rng(seed)
+    N, B = hfl.num_clusters, hfl.mus_per_cluster * 2
+
+    def batches():
+        while True:
+            toks = rng.integers(0, cfg.vocab_size, (N, B, 16))
+            yield {"tokens": jnp.asarray(toks)}
+
+    t0 = time.perf_counter()
+    _, trace = engine.run(state, train, sync, batches(), periods * hfl.period)
+    host_s = time.perf_counter() - t0
+    events = len(trace.rows)
+    m = trace.meta
+    return {
+        "n_mus": engine.fleet.K,
+        "events": events,
+        "wallclock_s": trace.wallclock,
+        "per_period_s": trace.wallclock / periods,
+        "bits_access_total": m["bits_access_total"],
+        "bits_fronthaul_total": m["bits_fronthaul_total"],
+        "t_fl_iter_s": m.get("t_fl_iter_s"),
+        "t_hfl_period_s": m.get("t_hfl_period_s"),
+        "events_per_s_host": events / host_s,
+        "per_event_ms_host": 1e3 * host_s / events,
+    }
+
+
+def run_pricing_sweep(n: int = 100_000, seed: int = 0,
+                      baseline_sample: int = 2_000):
+    """100k-MU pricing sweep: streamed ``optimal_rate_vec`` vs the
+    per-object scalar golden-section baseline (same 60 iterations).
+
+    The baseline is timed on a ``baseline_sample``-MU prefix and
+    extrapolated linearly — each MU's search is independent, so the full
+    loop is exactly sample-proportional and the short timing keeps the leg
+    CI-sized. ``pricing_speedup_100k`` must stay >= 10x (the refactor's
+    acceptance floor); it is gated larger-is-better against the blessed
+    baseline."""
+    topo = HCNTopology(seed=seed)
+    rng = np.random.default_rng(seed)
+    pos = uniform_disk(rng, n, topo.area_radius)
+    d = np.empty(n)
+    chunk = 1 << 15
+    for s in range(0, n, chunk):
+        d[s:s + chunk] = np.linalg.norm(
+            pos[s:s + chunk, None, :] - topo.sbs_pos[None], axis=2
+        ).min(axis=1)
+    lp = LatencyParams()
+    kw = dict(B0=lp.B0, Pmax=lp.p_mu, m=1, N0=lp.n0, alpha=lp.alpha,
+              ber=lp.ber, iters=60)
+    t0 = time.perf_counter()
+    rates = optimal_rate_vec(d, chunk=chunk, **kw)
+    t_vec = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for x in d[:baseline_sample]:
+        optimal_rate_per_subcarrier(d=float(x), **kw)
+    t_obj = (time.perf_counter() - t0) * (n / baseline_sample)
+    return {
+        "n_mus": n,
+        "pricing_speedup_100k": t_obj / t_vec,
+        "t_vectorized_host_s": t_vec,
+        "t_per_object_host_s_est": t_obj,
+        "rate_mean_bps": float(rates.mean()),
+    }
 
 
 def main():

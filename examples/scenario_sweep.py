@@ -43,6 +43,8 @@ def main():
     for name, scn in SCENARIOS.items():
         if scn.kind != "train":
             continue
+        if (scn.sim.fleet_mus_per_cluster or 0) > 1000:
+            continue  # scale-1m/scale-100k: far too big for this side-by-side
         hfl = apply_hfl_overrides(
             scn, HFLConfig(num_clusters=4, mus_per_cluster=2, period=4)
         )

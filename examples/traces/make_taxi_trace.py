@@ -1,0 +1,50 @@
+"""Regenerate ``taxi_6mu.csv`` — a taxi-style GPS log in the trace schema.
+
+Real vehicular datasets (SF cabspotting, T-Drive, SUMO fcd-output) share
+three properties the synthetic generators' dense output lacks: street-grid
+motion, per-vehicle sample clocks that are IRREGULAR (GPS pings every few
+seconds, not a fixed dt), and idle dwells (passenger pickup) where the
+position holds still. This script reshapes the Manhattan-grid generator's
+trajectory into exactly that and writes it in the simulator's portable CSV
+schema (``t,mu_id,x,y`` — see ``repro.sim.traces``), so the checked-in file
+doubles as the reference for converting a real taxi/SUMO export: map each
+vehicle to a ``mu_id``, project coordinates to metres around the MBS, done.
+
+  PYTHONPATH=src python examples/traces/make_taxi_trace.py
+"""
+import numpy as np
+
+from repro.sim.traces import MobilityTrace, gen_manhattan_grid
+
+K, DURATION, SEED = 6, 600.0, 42
+
+
+def main():
+    dense = gen_manhattan_grid(K, DURATION, speed_mps=12.0, dt=1.0, seed=SEED)
+    rng = np.random.default_rng(SEED)
+    times, xy = [], []
+    for k in range(K):
+        tk, pk = dense.times[k], dense.xy[k]
+        # irregular GPS pings: successive gaps uniform in 3..15 s
+        picks = [0]
+        while picks[-1] < len(tk) - 1:
+            picks.append(min(picks[-1] + int(rng.integers(3, 16)),
+                             len(tk) - 1))
+        t, p = tk[picks].copy(), pk[picks].copy()
+        # one passenger dwell per cab: hold position for 30-90 s by
+        # shifting all later pings (clipped back into the trace span)
+        i = int(rng.integers(1, len(t) - 1))
+        dwell = float(rng.uniform(30.0, 90.0))
+        t = np.concatenate([t[:i + 1], [t[i] + dwell], t[i + 1:] + dwell])
+        p = np.concatenate([p[:i + 1], p[i:i + 1], p[i + 1:]])
+        keep = t <= DURATION
+        times.append(t[keep])
+        xy.append(p[keep])
+    MobilityTrace(times, xy).save("examples/traces/taxi_6mu.csv")
+    n = sum(len(t) for t in times)
+    print(f"wrote examples/traces/taxi_6mu.csv: {K} cabs, {n} pings, "
+          f"{DURATION:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

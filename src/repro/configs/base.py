@@ -241,6 +241,11 @@ class SimConfig:
     base_compute_s: float = 0.05  # mean wall time of one local iteration
     compute_sigma: float = 0.0  # lognormal sigma of per-MU compute multiplier
     dropout: float = 0.0  # per-round MU unavailability probability
+    # diurnal availability curve (0 = flat, the legacy behaviour):
+    # unavail(t) = clip(dropout * (1 + amp * sin(2pi (t/period + phase))), 0, 1)
+    diurnal_amp: float = 0.0
+    diurnal_period_s: float = 86400.0
+    diurnal_phase: float = 0.0
     speed_mps: float = 0.0  # random-waypoint speed; 0 = static (paper)
     deadline_factor: float = 1.5  # deadline = factor * median per-MU round time
     staleness_exp: float = 1.0  # async weight = (1/N) * (1+staleness)^-exp
@@ -263,6 +268,20 @@ class SimConfig:
     #   stale     -- tracker attached but shards never leave the birth
     #                cluster (explicit control arm for the benchmark)
     residency: str = "static"
+    # --- fleet scale (the million-MU regime) ---
+    # physical MUs per cluster; None = hfl.mus_per_cluster (every MU owns a
+    # training slot, the legacy 1:1 layout). Larger values oversubscribe:
+    # the fleet is subsampled into the mpc training slots each round
+    # (requires a residency tracker to pick the resident shards).
+    fleet_mus_per_cluster: Optional[int] = None
+    # UL rate pricing: "maxmin" = Alg. 2 max-min sub-carrier allocation
+    # (exact, needs M >= members per cluster); "single" = shared single
+    # sub-carrier M-QAM rates (any fleet size, streamed in chunks)
+    rate_model: str = "maxmin"
+    # mobility bookkeeping cadence [virtual s]: 0 = advance/re-associate/
+    # re-price at every event (legacy); > 0 batches fleet movement and
+    # re-pricing to at most once per interval (fleet-scale runs)
+    reprice_interval_s: float = 0.0
 
 
 # registry is populated by repro.configs.__init__

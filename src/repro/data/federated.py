@@ -80,6 +80,36 @@ class ResidencyTracker:
         """MU ids whose data cluster ``n`` currently trains on."""
         return np.nonzero(self.holds[n])[0]
 
+    def members_csr(self, avail=None):
+        """All clusters' member lists in one pass: ``(cols, starts)`` with
+        cluster ``n``'s resident MU ids (ascending, optionally pre-masked by
+        the ``avail`` [K] bool vector) at ``cols[starts[n]:starts[n+1]]``.
+
+        One row-major ``nonzero`` over the holds matrix instead of N
+        per-cluster scans — the vectorized engine's per-round residency
+        lookup. Each slice is bit-identical to ``members(n)`` (masked by
+        ``avail``): ``nonzero`` walks rows in order, columns ascending.
+        """
+        h = self.holds if avail is None else self.holds & np.asarray(avail, bool)[None, :]
+        rows, cols = np.nonzero(h)
+        starts = np.searchsorted(rows, np.arange(self.N + 1))
+        return cols, starts
+
+    def copy_counts_at(self, idx) -> np.ndarray:
+        """Holder count for the given MU ids (any-shape int array).
+
+        Array-indexed slice of ``copy_counts()`` that only reduces the
+        selected columns — O(N * len(idx)) instead of O(N * K) when the
+        engine prices a handful of slots out of a million-MU fleet.
+        """
+        idx = np.asarray(idx, int)
+        return self.holds[:, idx.ravel()].sum(axis=0).reshape(idx.shape)
+
+    def shard_weights_at(self, idx) -> np.ndarray:
+        """``shard_weights()[idx]`` without materialising the full [K]
+        vector (same ``1 / n_copies`` duplicate-conservation weighting)."""
+        return 1.0 / np.maximum(self.copy_counts_at(idx), 1)
+
     def counts(self) -> np.ndarray:
         """Resident shard count per cluster [N]."""
         return self.holds.sum(axis=1)

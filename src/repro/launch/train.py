@@ -101,7 +101,9 @@ def main(argv=None):
     ap.add_argument("--scenario", default=None,
                     help="run through the HCN simulator (repro.sim): "
                          "paper-fig3 | stragglers | mobility | dropout | "
-                         "async | trace-replay | manhattan | scale-100k. "
+                         "async | trace-replay | manhattan | diurnal | "
+                         "flash-crowd | scale-1m (live 1.05M-MU fleet) | "
+                         "scale-100k (deprecated alias of scale-1m). "
                          "A scenario may pin HFL settings (paper-fig3 pins "
                          "the paper's 7-cluster topology, K=4, H=2, φ).")
     ap.add_argument("--sim-seed", type=int, default=0,
@@ -127,6 +129,9 @@ def main(argv=None):
         from repro.sim.scenarios import get_scenario, run_scale_sampling
         scenario = get_scenario(args.scenario)
         if scenario.kind == "sampling":
+            # no registry scenario is sampling-kind anymore (scale-100k
+            # silently skipped training; it now aliases the live scale-1m
+            # path) — kept for out-of-registry Scenario objects
             from repro.utils.format import format_metrics
             stats = _jsonable(run_scale_sampling(scenario))
             print(f"[sim] {args.scenario}: "

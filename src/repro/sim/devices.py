@@ -68,6 +68,9 @@ class DeviceFleet:
     compute_sigma : lognormal sigma of the per-MU compute-time multiplier
         (normalised so the multiplier has mean 1; 0 = homogeneous fleet).
     dropout : per-round probability that an MU is unavailable.
+    diurnal_amp : amplitude of a sinusoidal modulation of ``dropout`` over
+        virtual time (0 = flat availability, the legacy behavior):
+        ``p(t) = clip(dropout * (1 + amp * sin(2pi (t/period + phase))), 0, 1)``.
     speed_mps : random-waypoint speed; 0 = static users (paper setting).
     trace : a ``sim.traces.MobilityTrace`` to REPLAY instead of the
         waypoint model (mutually exclusive with ``speed_mps > 0``). Its K
@@ -82,6 +85,9 @@ class DeviceFleet:
         *,
         compute_sigma: float = 0.0,
         dropout: float = 0.0,
+        diurnal_amp: float = 0.0,
+        diurnal_period_s: float = 86400.0,
+        diurnal_phase: float = 0.0,
         speed_mps: float = 0.0,
         seed: int = 0,
         compute_mult: Optional[np.ndarray] = None,
@@ -92,7 +98,11 @@ class DeviceFleet:
         self.pos, self.cid = topo.drop_users(mus_per_cluster)
         self.K = len(self.cid)
         self.dropout = float(dropout)
+        self.diurnal_amp = float(diurnal_amp)
+        self.diurnal_period_s = float(diurnal_period_s)
+        self.diurnal_phase = float(diurnal_phase)
         self.speed_mps = float(speed_mps)
+        self._cluster_cache = None
         self.trace = trace
         self._trace_t = 0.0
         if trace is not None:
@@ -121,15 +131,27 @@ class DeviceFleet:
 
     # --- availability ----------------------------------------------------
 
-    def draw_available(self) -> np.ndarray:
+    def unavailability(self, t: float = 0.0) -> float:
+        """Per-MU unavailability probability at virtual time ``t``."""
+        if self.diurnal_amp <= 0:
+            return self.dropout
+        wave = 1.0 + self.diurnal_amp * np.sin(
+            2.0 * np.pi * (t / self.diurnal_period_s + self.diurnal_phase)
+        )
+        return float(np.clip(self.dropout * wave, 0.0, 1.0))
+
+    def draw_available(self, t: float = 0.0) -> np.ndarray:
         """Per-round availability trace: True = MU participates [K] bool.
 
         Consumes the fleet RNG, so calling once per round yields a
-        deterministic per-(seed, round) trace.
+        deterministic per-(seed, round) trace. ``t`` (virtual seconds) only
+        matters under a diurnal curve (``diurnal_amp > 0``); with a flat
+        curve the draw is bit-identical to the pre-diurnal fleet.
         """
-        if self.dropout <= 0:
+        p = self.dropout if self.diurnal_amp <= 0 else self.unavailability(t)
+        if p <= 0:
             return np.ones(self.K, bool)
-        return self.rng.uniform(0.0, 1.0, self.K) >= self.dropout
+        return self.rng.uniform(0.0, 1.0, self.K) >= p
 
     # --- mobility --------------------------------------------------------
 
@@ -162,16 +184,63 @@ class DeviceFleet:
         waypoint_step(self.pos, self._waypoint, budget, self.rng,
                       self.topo.area_radius)
 
-    def reassociate(self) -> np.ndarray:
-        """Re-attach every MU to its nearest SBS; returns new cid [K]."""
-        d = np.linalg.norm(
-            self.pos[:, None, :] - self.topo.sbs_pos[None, :, :], axis=2
-        )
-        self.cid = np.argmin(d, axis=1)
+    def reassociate(self, chunk: int = 1 << 17) -> np.ndarray:
+        """Re-attach every MU to its nearest SBS; returns new cid [K].
+
+        Streams the [chunk, num_sbs, 2] distance block so a million-MU
+        fleet never materialises the full K x N matrix (each row's argmin
+        is independent — chunking is bit-exact).
+        """
+        cid = np.empty(self.K, np.int64)
+        for s in range(0, self.K, chunk):
+            d = np.linalg.norm(
+                self.pos[s:s + chunk, None, :] - self.topo.sbs_pos[None, :, :],
+                axis=2,
+            )
+            cid[s:s + chunk] = np.argmin(d, axis=1)
+        self.cid = cid
+        self._cluster_cache = None
         return self.cid
+
+    # --- cluster aggregates ----------------------------------------------
+    #
+    # Membership is queried once per event by the engine; at fleet scale a
+    # fresh ``nonzero`` per query is O(K) each. The CSR cache amortises that
+    # to one stable argsort per (re)association epoch, after which any
+    # cluster's member list / size / compute max is an O(size) slice.
+
+    def _clusters(self):
+        if self._cluster_cache is None:
+            order = np.argsort(self.cid, kind="stable")
+            starts = np.searchsorted(
+                self.cid[order], np.arange(self.topo.num_clusters + 1)
+            )
+            sizes = np.diff(starts)
+            comp_max = np.zeros(self.topo.num_clusters)
+            np.maximum.at(comp_max, self.cid, self.compute_mult)
+            self._cluster_cache = (order, starts, sizes, comp_max)
+        return self._cluster_cache
+
+    def cluster_sizes(self) -> np.ndarray:
+        """MUs attached per cluster [num_clusters] int (cached)."""
+        return self._clusters()[2]
+
+    def cluster_comp_max(self, base_compute_s: float) -> np.ndarray:
+        """Slowest member's one-iteration wall time per cluster
+        [num_clusters]; 0 for empty clusters (cached)."""
+        return base_compute_s * self._clusters()[3]
+
+    def cluster_members_csr(self):
+        """CSR view of membership: ``(order, starts)`` with cluster ``n``'s
+        member ids (ascending) at ``order[starts[n]:starts[n+1]]``."""
+        order, starts, _, _ = self._clusters()
+        return order, starts
 
     # --- helpers ---------------------------------------------------------
 
     def cluster_members(self, n: int) -> np.ndarray:
-        """Indices of the MUs currently attached to cluster ``n``."""
-        return np.nonzero(self.cid == n)[0]
+        """Indices of the MUs currently attached to cluster ``n``
+        (ascending — the stable argsort preserves id order, matching the
+        historical ``nonzero`` scan bit-for-bit)."""
+        order, starts, _, _ = self._clusters()
+        return order[starts[n]:starts[n + 1]]

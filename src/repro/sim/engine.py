@@ -14,6 +14,19 @@ Couples three layers that never met before this subsystem:
 Time is virtual (``repro.sim.events``): a run is a pure function of
 (scenario, seed) and replays bit-identically.
 
+The hot paths are *cluster-granular over vectorized per-MU state*: events
+carry cluster ids only, and every per-MU quantity (round times, masks,
+survivor aggregates, slot sources) is computed with flat [K] numpy array
+ops — no per-MU Python loops — so the same engine runs the paper's 28-MU
+cells and million-MU fleets (``scale-1m``). ``sim.legacy.LegacySimEngine``
+keeps the pre-vectorization per-MU loop bodies as a frozen reference; the
+equivalence tests pin the rewrite bit-identical to it on the small
+scenarios. Fleet-scale knobs: ``SimConfig.fleet_mus_per_cluster``
+oversubscribes the training slots (cluster-subsampled batches via the
+residency tracker), ``rate_model='single'`` prices UL with streamed
+single-subcarrier M-QAM rates instead of Alg. 2 (which needs M >= K), and
+``reprice_interval_s`` batches mobility bookkeeping between events.
+
 Three sync disciplines:
 
   * ``lockstep`` — the paper's schedule: every cluster runs H intra-cluster
@@ -77,7 +90,10 @@ import numpy as np
 from repro.configs.base import HFLConfig, SimConfig
 from repro.sim.devices import DeviceFleet
 from repro.sim.events import Event, EventQueue
-from repro.wireless.latency import LatencyParams, fl_latency, hfl_latency
+from repro.wireless.latency import (
+    LatencyParams, fl_latency, fl_latency_single, hfl_latency,
+    hfl_latency_single,
+)
 from repro.wireless.topology import HCNTopology
 
 
@@ -299,9 +315,30 @@ class SimEngine:
         self.sim = sim_cfg if sim_cfg is not None else SimConfig()
         self.topo, self.fleet, self.lp = topo, fleet, lp
         self.wireless = topo is not None and fleet is not None and lp is not None
+        # oversubscribed fleets: more physical MUs than training slots
+        # (SimConfig.fleet_mus_per_cluster > hfl.mus_per_cluster). Each
+        # round subsamples the resident shards into the slots, so batches
+        # stay [N, localB] while pricing/availability run fleet-wide.
+        self._oversub = False
         if self.wireless:
             assert hfl_cfg is not None, "wireless simulation needs hfl_cfg"
-            assert fleet.K == hfl_cfg.num_clusters * hfl_cfg.mus_per_cluster
+            slots = hfl_cfg.num_clusters * hfl_cfg.mus_per_cluster
+            self._oversub = fleet.K > slots
+            if self._oversub:
+                assert residency is not None, (
+                    "an oversubscribed fleet (K > num_clusters * "
+                    "mus_per_cluster) needs a residency tracker to pick "
+                    "which resident shards fill the training slots")
+            else:
+                assert fleet.K == slots
+            if self.sim.rate_model == "maxmin" and fleet.K > lp.M:
+                raise ValueError(
+                    f"rate_model='maxmin' (Alg. 2) needs M >= K sub-carriers "
+                    f"but M={lp.M} < K={fleet.K}; use rate_model='single' "
+                    f"for fleet-scale runs")
+            if self.sim.rate_model not in ("maxmin", "single"):
+                raise ValueError(
+                    f"unknown rate_model {self.sim.rate_model!r}")
         # data residency tracker (data.federated.ResidencyTracker): when
         # set, batch rows follow the resident shards instead of the static
         # slot layout. None = legacy static residency (bit-identical).
@@ -312,6 +349,10 @@ class SimEngine:
             assert residency.K == fleet.K and \
                 residency.N == hfl_cfg.num_clusters
         self._aux = None  # cached hfl_latency aux for the current positions
+        self._crt = None  # cached per-cluster round times (same lifetime)
+        self._move_accum = 0.0  # virtual s of motion deferred by the
+        #                         reprice_interval_s throttle
+        self._vt = 0.0  # current virtual time (diurnal availability clock)
         self._train_launches = 0
         self._sync_launches = 0
         self._bits_access = 0.0
@@ -434,16 +475,24 @@ class SimEngine:
         return {k: float(self._ab[k])
                 for k in ("mu_ul", "sbs_dl", "sbs_ul", "mbs_dl")}
 
+    def _price_hfl(self):
+        """(per_iter, aux) under the configured rate model: exact max-min
+        allocation (``maxmin``, the paper's Alg. 2) or the fleet-scale
+        shared-single-subcarrier model (``single``, any K)."""
+        fn = (hfl_latency_single if self.sim.rate_model == "single"
+              else hfl_latency)
+        return fn(
+            self.topo, self.fleet.pos, self.fleet.cid, self.lp,
+            H=self.period,
+            phi_mu_ul=self.hfl.phi_mu_ul, phi_sbs_dl=self.hfl.phi_sbs_dl,
+            phi_sbs_ul=self.hfl.phi_sbs_ul, phi_mbs_dl=self.hfl.phi_mbs_dl,
+            reuse=self.sim.reuse,
+            payload_bits=self._payload_overrides(),
+        )
+
     def _latency_aux(self) -> dict:
         if self._aux is None:
-            _, self._aux = hfl_latency(
-                self.topo, self.fleet.pos, self.fleet.cid, self.lp,
-                H=self.period,
-                phi_mu_ul=self.hfl.phi_mu_ul, phi_sbs_dl=self.hfl.phi_sbs_dl,
-                phi_sbs_ul=self.hfl.phi_sbs_ul, phi_mbs_dl=self.hfl.phi_mbs_dl,
-                reuse=self.sim.reuse,
-                payload_bits=self._payload_overrides(),
-            )
+            _, self._aux = self._price_hfl()
         return self._aux
 
     def _meta(self) -> dict:
@@ -465,21 +514,18 @@ class SimEngine:
         if not self.wireless:
             meta["wireless"] = False
             return meta
-        comp_max = float(self.fleet.compute_times(self.sim.base_compute_s).max())
+        comp_max = float(
+            self.sim.base_compute_s * self.fleet.compute_mult.max())
         pb = self._payload_overrides()
-        t_fl, _ = fl_latency(
+        fl_fn = (fl_latency_single if self.sim.rate_model == "single"
+                 else fl_latency)
+        t_fl, _ = fl_fn(
             self.topo, self.fleet.pos, self.lp,
             phi_ul=self.hfl.phi_mu_ul, phi_dl=self.hfl.phi_mbs_dl,
             ul_bits=None if pb is None else pb["mu_ul"],
             dl_bits=None if pb is None else pb["mbs_dl"],
         )
-        per_iter, aux = hfl_latency(
-            self.topo, self.fleet.pos, self.fleet.cid, self.lp, H=self.period,
-            phi_mu_ul=self.hfl.phi_mu_ul, phi_sbs_dl=self.hfl.phi_sbs_dl,
-            phi_sbs_ul=self.hfl.phi_sbs_ul, phi_mbs_dl=self.hfl.phi_mbs_dl,
-            reuse=self.sim.reuse,
-            payload_bits=pb,
-        )
+        per_iter, aux = self._price_hfl()
         self._aux = aux
         meta.update(
             wireless=True,
@@ -490,26 +536,36 @@ class SimEngine:
         return meta
 
     def _round_ctx(self, deadline: bool) -> dict:
-        """Latency/participation context for ONE upcoming H-period round."""
+        """Latency/participation context for ONE upcoming H-period round.
+
+        Fully vectorized over the flat [K] fleet state: per-MU round times
+        are one fused expression over the scattered rate vector, the
+        survivor aggregates are exact group min/max scatters, and the slot
+        sources come from one CSR pass — no per-MU Python loops, so a round
+        costs the same few vector passes at 28 MUs or a million. Values are
+        bit-identical to the historical per-cluster loop (same elementwise
+        expressions; the ufunc reductions return an element of each group,
+        exactly like the loop's ``.min()``/``.max()``). Only the Alg. 2
+        sub-carrier reclamation stays a per-*affected-cluster* loop — it is
+        skipped entirely under ``rate_model='single'`` (m=1 rates are
+        allocation-free).
+        """
         if not self.wireless:
             return dict(iter_s=self.sim.base_compute_s, sync_s=0.0,
                         mask=None, keep_clusters=None, dropped=0,
                         participants=None, deadline_s=None)
         hfl, lp, H = self.hfl, self.lp, self.period
         aux = self._latency_aux()
+        cid = self.fleet.cid
         comp = self.fleet.compute_times(self.sim.base_compute_s)
-        avail = self.fleet.draw_available()
-        K, N = self.fleet.K, hfl.num_clusters
+        avail = self.fleet.draw_available(self._vt)
+        N = hfl.num_clusters
         ul_pay = (float(self._ab["mu_ul"]) if self.ledger is not None
                   else lp.payload(hfl.phi_mu_ul))
 
         # per-MU round time: H iterations of own compute + own UL + cluster DL
-        r = np.full(K, np.inf)
-        for n in range(N):
-            members = self.fleet.cluster_members(n)
-            if members.size:
-                rates = aux["mu_rates"][n]
-                r[members] = H * (comp[members] + ul_pay / rates + aux["gamma_dl"][n])
+        rate_flat = aux["mu_rate_flat"]
+        r = H * (comp + ul_pay / rate_flat + aux["gamma_dl"][cid])
 
         mask = avail.copy()
         deadline_s = None
@@ -528,50 +584,51 @@ class SimEngine:
             src = self._slot_sources(None if mask.all() else mask)
 
         # cluster iteration time over the SURVIVING MUs only
-        it_n = np.zeros(N)
-        for n in range(N):
-            members = self.fleet.cluster_members(n)
-            if not members.size:
-                continue
-            m_keep = mask[members]
-            if not m_keep.any():
-                continue  # no survivors: the cluster sits this round out
-            rates = aux["mu_rates"][n]
-            if not m_keep.all():
-                # a dropped/unavailable MU's sub-carriers are reclaimed:
-                # re-run the max-min allocation (Alg. 2) over the survivors
-                # with the cluster's full budget, so they inherit the
-                # bandwidth instead of leaving it dark (ROADMAP follow-up)
+        sizes = self.fleet.cluster_sizes()
+        surv = np.bincount(cid[mask], minlength=N)
+        min_rate = np.full(N, np.inf)
+        np.minimum.at(min_rate, cid[mask], rate_flat[mask])
+        if src is not None:
+            # max is idempotent: duplicate slot sources reduce the same as
+            # the historical np.unique pass
+            valid = src >= 0
+            comp_src = np.where(valid, comp[np.where(valid, src, 0)], -np.inf)
+            comp_term = np.where(valid.any(axis=1), comp_src.max(axis=1), 0.0)
+        else:
+            comp_term = np.full(N, -np.inf)
+            np.maximum.at(comp_term, cid[mask], comp[mask])
+        if self.sim.rate_model != "single":
+            # a dropped/unavailable MU's sub-carriers are reclaimed: re-run
+            # the max-min allocation (Alg. 2) over each AFFECTED cluster's
+            # survivors with the cluster's full budget, so they inherit the
+            # bandwidth instead of leaving it dark
+            affected = np.nonzero((surv > 0) & (surv < sizes))[0]
+            if affected.size:
                 from repro.wireless.subcarrier import reallocate_after_drop
 
-                d = self.topo.dist_to_sbs(
-                    self.fleet.pos[members], self.fleet.cid[members])
-                rates = reallocate_after_drop(
-                    d, m_keep, aux["m_cluster"],
-                    B0=lp.B0, Pmax=lp.p_mu, N0=lp.n0,
-                    alpha=lp.alpha, ber=lp.ber)
-            if src is not None:
-                trainers = np.unique(src[n][src[n] >= 0])
-                comp_term = comp[trainers].max() if trainers.size else 0.0
-            else:
-                comp_term = comp[members[m_keep]].max()
-            it_n[n] = (
-                ul_pay / rates[m_keep].min()
-                + aux["gamma_dl"][n]
-                + comp_term
-            )
+                for n in affected:
+                    members = self.fleet.cluster_members(n)
+                    d = self.topo.dist_to_sbs(
+                        self.fleet.pos[members], cid[members])
+                    rates = reallocate_after_drop(
+                        d, mask[members], aux["m_cluster"],
+                        B0=lp.B0, Pmax=lp.p_mu, N0=lp.n0,
+                        alpha=lp.alpha, ber=lp.ber)
+                    min_rate[n] = rates[mask[members]].min()
+        it_n = np.where(
+            surv > 0, ul_pay / min_rate + aux["gamma_dl"] + comp_term, 0.0)
         iter_s = float(it_n.max()) if it_n.max() > 0 else self.sim.base_compute_s
         sync_s = float(aux["theta_u"] + aux["theta_d"] + aux["gamma_dl"].max())
 
-        # static data layout: MU k trains in cluster k // mus_per_cluster
-        mpc = hfl.mus_per_cluster
-        keep_clusters = np.array(
-            [mask[n * mpc:(n + 1) * mpc].any() for n in range(N)]
-        )
+        keep_clusters = None
+        if not self._oversub:
+            # static data layout: MU k trains in cluster k // mus_per_cluster
+            keep_clusters = mask.reshape(N, hfl.mus_per_cluster).any(axis=1)
         ctx = dict(
             iter_s=iter_s, sync_s=sync_s,
             mask=None if mask.all() else mask,
-            keep_clusters=None if keep_clusters.all() else keep_clusters,
+            keep_clusters=(None if keep_clusters is None or keep_clusters.all()
+                           else keep_clusters),
             dropped=int((~mask).sum()),
             participants=int(mask.sum()),
             deadline_s=deadline_s,
@@ -587,14 +644,27 @@ class SimEngine:
     def _advance_fleet(self, dt: float) -> None:
         """Advance positions (waypoint integration or trace replay),
         re-associate to the nearest SBS, propagate the new association to
-        the residency tracker, and invalidate the cached radio pricing."""
+        the residency tracker, and invalidate the cached radio pricing.
+
+        With ``sim.reprice_interval_s > 0`` motion is batched: deferred
+        virtual time accumulates until the interval elapses, then one
+        advance/re-associate/re-price covers it all (positions integrate
+        the full accumulated budget, so distance travelled is conserved).
+        0 keeps the legacy every-event cadence bit-identically.
+        """
         if self.fleet is None or not self.fleet.mobile:
             return
+        if self.sim.reprice_interval_s > 0:
+            self._move_accum += dt
+            if self._move_accum < self.sim.reprice_interval_s:
+                return
+            dt, self._move_accum = self._move_accum, 0.0
         self.fleet.advance(dt)
         self.fleet.reassociate()
         if self.residency is not None:
             self.residency.update(self.fleet.cid)
         self._aux = None  # positions changed: re-price the radio
+        self._crt = None  # per-cluster round times follow the pricing
 
     # --- data residency ---------------------------------------------------
 
@@ -613,12 +683,19 @@ class SimEngine:
         src = np.full((N, mpc), -1, np.int64)
         off = self._slot_rot
         self._slot_rot += 1
-        for n in range(N):
-            cand = self.residency.members(n)
-            if mask is not None:
-                cand = cand[mask[cand]]
-            if cand.size:
-                src[n] = cand[(np.arange(mpc) + off * mpc) % cand.size]
+        # one CSR pass over the (availability-masked) holds matrix replaces
+        # N per-cluster member scans; each cluster's candidate slice is the
+        # same ascending id list the scans produced, so the cycled fill is
+        # bit-identical
+        cols, starts = self.residency.members_csr(mask)
+        sizes = np.diff(starts)
+        has = sizes > 0
+        if has.any():
+            idx = (np.arange(mpc)[None, :] + off * mpc) \
+                % np.maximum(sizes, 1)[:, None]
+            # gather only the non-empty rows (an empty cluster's start can
+            # sit one past the end of cols)
+            src[has] = cols[(starts[:-1, None] + idx)[has]]
         return src
 
     def _gather_batch(self, batch, src: np.ndarray):
@@ -640,6 +717,23 @@ class SimEngine:
             return batch, None
         N, mpc = self.hfl.num_clusters, self.hfl.mus_per_cluster
         localB = leaves[0].shape[1]
+        if self._oversub:
+            # fleet-scale (cluster-subsampled) batches: the generated
+            # [N, localB] rows carry no per-MU identity — there are more
+            # shards than data slots — so the subsampled slots train on the
+            # cluster's rows as-is while ``src`` still drives pricing,
+            # accounting, idling and the duplicate-policy row weights
+            keep = src[:, 0] >= 0
+            out = batch
+            if (isinstance(batch, dict) and localB % mpc == 0
+                    and self.residency.policy == "duplicate"):
+                w_slot = np.where(
+                    src >= 0,
+                    self.residency.shard_weights_at(np.maximum(src, 0)), 1.0)
+                out = dict(batch)
+                out["row_weight"] = jnp.asarray(
+                    np.repeat(w_slot, localB // mpc, axis=1), jnp.float32)
+            return out, (None if keep.all() else keep)
         if localB % mpc:
             return batch, None  # unknown row layout; leave untouched
         bpm = localB // mpc
@@ -671,6 +765,16 @@ class SimEngine:
             return jax.tree.map(take_row, batch)
         mpc = self.hfl.mus_per_cluster
         localB = leaves[0].shape[1]
+        if self._oversub:
+            # see _gather_batch: subsampled slots train on the cluster's
+            # generated rows, weighted by their source shards' copy counts
+            out = jax.tree.map(take_row, batch)
+            if (isinstance(out, dict) and localB % mpc == 0
+                    and self.residency.policy == "duplicate"):
+                w = np.repeat(self.residency.shard_weights_at(src_n),
+                              localB // mpc)
+                out["row_weight"] = jnp.asarray(w, jnp.float32)
+            return out
         if localB % mpc:
             return jax.tree.map(take_row, batch)  # unknown layout: slice
         bpm = localB // mpc
@@ -775,7 +879,9 @@ class SimEngine:
         for step in range(num_steps):
             if step % H == 0:
                 # _round_ctx draws the slot sources itself (residency runs)
-                # so compute pricing can follow the resident shards
+                # so compute pricing can follow the resident shards; the
+                # virtual clock feeds the diurnal availability curve
+                self._vt = t
                 ctx = self._round_ctx(deadline)
             if self.residency is not None:
                 batch, keep = self._gather_batch(next(it), ctx["src"])
@@ -845,20 +951,37 @@ class SimEngine:
 
     # --- async ------------------------------------------------------------
 
-    def _cluster_round_time(self, n: int, comp: Optional[np.ndarray]) -> float:
+    def _cluster_round_times(self, comp: Optional[np.ndarray]) -> np.ndarray:
+        """Async round times for ALL clusters at the current pricing [N],
+        cached until the fleet moves: one scatter-max over the resident (or
+        radio) membership replaces the historical per-event member scan, so
+        scheduling an event is O(1) in the fleet size."""
+        if self._crt is not None:
+            return self._crt
+        N = self.hfl.num_clusters
         if not self.wireless:
-            return self.period * self.sim.base_compute_s
+            self._crt = np.full(N, self.period * self.sim.base_compute_s)
+            return self._crt
         aux = self._latency_aux()
         # compute follows the DATA: with a residency tracker the round's
         # trainers are the resident shards' host MUs, whose speed
         # multipliers price the round (radio terms stay with the radio)
-        members = (self.residency.members(n) if self.residency is not None
-                   else self.fleet.cluster_members(n))
-        comp_n = comp[members].max() if members.size else self.sim.base_compute_s
-        g = aux["gamma_ul"][n] + aux["gamma_dl"][n]
-        return float(
-            self.period * (comp_n + g) + aux["theta_u"] + aux["theta_d"]
-        )
+        if self.residency is not None:
+            cols, starts = self.residency.members_csr()
+            counts = np.diff(starts)
+            comp_n = np.full(N, -np.inf)
+            np.maximum.at(comp_n, np.repeat(np.arange(N), counts), comp[cols])
+        else:
+            counts = self.fleet.cluster_sizes()
+            comp_n = self.fleet.cluster_comp_max(self.sim.base_compute_s)
+        comp_n = np.where(counts > 0, comp_n, self.sim.base_compute_s)
+        g = aux["gamma_ul"] + aux["gamma_dl"]
+        self._crt = (self.period * (comp_n + g)
+                     + aux["theta_u"] + aux["theta_d"])
+        return self._crt
+
+    def _cluster_round_time(self, n: int, comp: Optional[np.ndarray]) -> float:
+        return float(self._cluster_round_times(comp)[n])
 
     def _run_async(self, state, train_step, batches, num_steps, on_step,
                    masked_train_step=None):
@@ -907,14 +1030,19 @@ class SimEngine:
             mask = None
             src = None
             dropped = 0
-            avail = (self.fleet.draw_available()
+            n_res = 0
+            self._vt = t
+            avail = (self.fleet.draw_available(t)
                      if self.fleet is not None and self.fleet.dropout > 0
                      else None)
             if self.residency is not None:
                 src = self._slot_sources(avail)
-                residents = self.residency.members(n)
+                # resident/survivor counts as boolean row sums (the member
+                # id lists the historical scan built are never needed here)
+                row_n = self.residency.holds[n]
+                n_res = int(row_n.sum())
                 if avail is not None:
-                    dropped = int((~avail[residents]).sum())
+                    dropped = n_res - int((row_n & avail).sum())
                 if src[n, 0] < 0:  # no available resident shard this round
                     if self._record:
                         trace.add(kind="idle", t=t, cluster=int(n),
@@ -940,7 +1068,7 @@ class SimEngine:
                     mask = np.ones(self.fleet.K, bool)
                     mask[slots] = avail[slots]
             members = (
-                self.fleet.cluster_members(n).size if self.fleet is not None
+                int(self.fleet.cluster_sizes()[n]) if self.fleet is not None
                 else hfl.mus_per_cluster
             )
             # access-link accounting charges the MUs whose data actually
@@ -948,7 +1076,7 @@ class SimEngine:
             # under a tracker that is min(available residents, mpc) — the
             # duplicate policy can accrue far more holders than train —
             # and the surviving radio members otherwise
-            participants = (min(int(residents.size) - dropped, mpc)
+            participants = (min(n_res - dropped, mpc)
                             if self.residency is not None
                             else max(members - dropped, 0))
             # state.step feeds step-indexed LR schedules; pin it to THIS

@@ -1,0 +1,149 @@
+"""Frozen pre-vectorization engine hot paths — the equivalence reference.
+
+``LegacySimEngine`` is ``SimEngine`` with the per-MU / per-cluster Python
+loop bodies the engine shipped *before* the cluster-vectorized rewrite,
+verbatim. It exists for one purpose: the refactor's acceptance criterion is
+that small scenarios replay **bit-identically** (same event log, same
+losses, same wall-clock), and a claim like that needs the old code to run
+against, not a changelog entry. ``tests/test_sim_equivalence.py`` drives
+both engines through the same scenarios and compares traces float-for-float.
+
+Do not use this engine for anything else: it walks Python loops over MUs
+and clusters on every round, scales as O(K) per *event*, and predates the
+fleet-scale features (oversubscribed fleets, ``rate_model='single'``,
+diurnal availability, ``reprice_interval_s`` — it raises on all of them).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.sim.engine import SimEngine
+
+
+class LegacySimEngine(SimEngine):
+    """The pre-refactor engine: identical maths, per-object iteration."""
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        if self._oversub:
+            raise ValueError("LegacySimEngine predates oversubscribed fleets")
+        if self.sim.rate_model != "maxmin":
+            raise ValueError("LegacySimEngine predates rate_model='single'")
+        if self.sim.reprice_interval_s > 0:
+            raise ValueError("LegacySimEngine predates reprice_interval_s")
+        if self.fleet is not None and self.fleet.diurnal_amp > 0:
+            raise ValueError("LegacySimEngine predates diurnal availability")
+
+    # --- frozen loop bodies ----------------------------------------------
+
+    def _round_ctx(self, deadline: bool) -> dict:
+        """Latency/participation context for ONE upcoming H-period round."""
+        if not self.wireless:
+            return dict(iter_s=self.sim.base_compute_s, sync_s=0.0,
+                        mask=None, keep_clusters=None, dropped=0,
+                        participants=None, deadline_s=None)
+        hfl, lp, H = self.hfl, self.lp, self.period
+        aux = self._latency_aux()
+        comp = self.fleet.compute_times(self.sim.base_compute_s)
+        avail = self.fleet.draw_available()
+        K, N = self.fleet.K, hfl.num_clusters
+        ul_pay = (float(self._ab["mu_ul"]) if self.ledger is not None
+                  else lp.payload(hfl.phi_mu_ul))
+
+        # per-MU round time: H iterations of own compute + own UL + cluster DL
+        r = np.full(K, np.inf)
+        for n in range(N):
+            members = self.fleet.cluster_members(n)
+            if members.size:
+                rates = aux["mu_rates"][n]
+                r[members] = H * (comp[members] + ul_pay / rates + aux["gamma_dl"][n])
+
+        mask = avail.copy()
+        deadline_s = None
+        if deadline and self.sim.deadline_factor > 0:
+            finite = r[np.isfinite(r)]
+            deadline_s = self.sim.deadline_factor * float(np.median(finite))
+            mask &= r <= deadline_s
+
+        src = None
+        if self.residency is not None:
+            src = self._slot_sources(None if mask.all() else mask)
+
+        # cluster iteration time over the SURVIVING MUs only
+        it_n = np.zeros(N)
+        for n in range(N):
+            members = self.fleet.cluster_members(n)
+            if not members.size:
+                continue
+            m_keep = mask[members]
+            if not m_keep.any():
+                continue  # no survivors: the cluster sits this round out
+            rates = aux["mu_rates"][n]
+            if not m_keep.all():
+                from repro.wireless.subcarrier import reallocate_after_drop
+
+                d = self.topo.dist_to_sbs(
+                    self.fleet.pos[members], self.fleet.cid[members])
+                rates = reallocate_after_drop(
+                    d, m_keep, aux["m_cluster"],
+                    B0=lp.B0, Pmax=lp.p_mu, N0=lp.n0,
+                    alpha=lp.alpha, ber=lp.ber)
+            if src is not None:
+                trainers = np.unique(src[n][src[n] >= 0])
+                comp_term = comp[trainers].max() if trainers.size else 0.0
+            else:
+                comp_term = comp[members[m_keep]].max()
+            it_n[n] = (
+                ul_pay / rates[m_keep].min()
+                + aux["gamma_dl"][n]
+                + comp_term
+            )
+        iter_s = float(it_n.max()) if it_n.max() > 0 else self.sim.base_compute_s
+        sync_s = float(aux["theta_u"] + aux["theta_d"] + aux["gamma_dl"].max())
+
+        # static data layout: MU k trains in cluster k // mus_per_cluster
+        mpc = hfl.mus_per_cluster
+        keep_clusters = np.array(
+            [mask[n * mpc:(n + 1) * mpc].any() for n in range(N)]
+        )
+        ctx = dict(
+            iter_s=iter_s, sync_s=sync_s,
+            mask=None if mask.all() else mask,
+            keep_clusters=None if keep_clusters.all() else keep_clusters,
+            dropped=int((~mask).sum()),
+            participants=int(mask.sum()),
+            deadline_s=deadline_s,
+        )
+        if src is not None:
+            ctx["src"] = src
+            ctx["participants"] = int(sum(
+                np.unique(row[row >= 0]).size for row in src))
+            ctx["active_clusters"] = int((src[:, 0] >= 0).sum())
+        return ctx
+
+    def _slot_sources(self, mask: Optional[np.ndarray]) -> np.ndarray:
+        N, mpc = self.hfl.num_clusters, self.hfl.mus_per_cluster
+        src = np.full((N, mpc), -1, np.int64)
+        off = self._slot_rot
+        self._slot_rot += 1
+        for n in range(N):
+            cand = self.residency.members(n)
+            if mask is not None:
+                cand = cand[mask[cand]]
+            if cand.size:
+                src[n] = cand[(np.arange(mpc) + off * mpc) % cand.size]
+        return src
+
+    def _cluster_round_time(self, n: int, comp: Optional[np.ndarray]) -> float:
+        if not self.wireless:
+            return self.period * self.sim.base_compute_s
+        aux = self._latency_aux()
+        members = (self.residency.members(n) if self.residency is not None
+                   else self.fleet.cluster_members(n))
+        comp_n = comp[members].max() if members.size else self.sim.base_compute_s
+        g = aux["gamma_ul"][n] + aux["gamma_dl"][n]
+        return float(
+            self.period * (comp_n + g) + aux["theta_u"] + aux["theta_d"]
+        )

@@ -23,13 +23,29 @@ Each scenario bundles a ``SimConfig`` (fleet + discipline knobs) with the
   * ``manhattan``   — street-grid mobility replay under the deadline
                       discipline: abrupt, correlated re-associations plus
                       straggler drop with sub-carrier reclamation.
-  * ``scale-100k``  — vectorized 100k-MU latency sampling (kind
-                      "sampling": aggregates only, never materializes
-                      per-user state; no training).
+  * ``diurnal``     — lockstep under a sinusoidal availability curve:
+                      unavailability swings through a compressed "day"
+                      within the run, so participation (and survivor
+                      pricing) breathes round to round.
+  * ``flash-crowd`` — ``hotspot-drift`` trace replay: an oversubscribed
+                      crowd converges on one cell while a surging
+                      availability wave rides on top; ``duplicate``
+                      residency accrues shard copies where the crowd goes.
+  * ``scale-1m``    — LIVE training + mobility + residency at 1.05M MUs:
+                      oversubscribed fleet (150k MUs/cluster, cluster-
+                      subsampled batches), streamed single-subcarrier
+                      pricing (``rate_model='single'``), batched mobility
+                      bookkeeping (``reprice_interval_s``).
+  * ``scale-100k``  — DEPRECATED alias of the ``scale-1m`` live path at
+                      ~105k MUs. (Historically kind "sampling": latency
+                      aggregates only, silently no training —
+                      ``run_scale_sampling`` keeps that sweep available
+                      as an explicit function call.)
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -114,10 +130,49 @@ SCENARIOS = {
         note="street-grid trace replay + deadline drop; survivors inherit "
              "reclaimed sub-carriers",
     ),
+    "diurnal": Scenario(
+        name="diurnal", kind="train",
+        sim=SimConfig(scenario="diurnal", discipline="lockstep", dropout=0.3,
+                      diurnal_amp=0.9, diurnal_period_s=240.0,
+                      diurnal_phase=0.75),
+        hfl=dict(sync_mode="sparse", **PAPER_PHIS),
+        note="sinusoidal availability (a compressed 240s day): "
+             "participation breathes from ~3% to ~57% unavailable",
+    ),
+    "flash-crowd": Scenario(
+        name="flash-crowd", kind="train",
+        sim=SimConfig(scenario="flash-crowd", discipline="async",
+                      compute_sigma=0.5, trace_model="hotspot-drift",
+                      residency="duplicate", fleet_mus_per_cluster=16,
+                      dropout=0.2, diurnal_amp=1.0, diurnal_period_s=120.0,
+                      diurnal_phase=-0.25),
+        hfl=dict(sync_mode="sparse", async_dl_sparse=True, **PAPER_PHIS),
+        note="hotspot-drift crowd surge: oversubscribed fleet converges on "
+             "one cell, duplicate residency accrues copies, availability "
+             "swings with a 120s wave",
+    ),
+    "scale-1m": Scenario(
+        name="scale-1m", kind="train",
+        sim=SimConfig(scenario="scale-1m", discipline="async",
+                      compute_sigma=0.5, dropout=0.1, speed_mps=30.0,
+                      residency="move", fleet_mus_per_cluster=150_000,
+                      rate_model="single", reprice_interval_s=600.0),
+        hfl=dict(num_clusters=7, mus_per_cluster=4, period=2,
+                 sync_mode="sparse", async_dl_sparse=True, **PAPER_PHIS),
+        note="1.05M-MU LIVE fleet: waypoint mobility + move residency + "
+             "cluster-subsampled training, streamed single-subcarrier "
+             "pricing, mobility bookkeeping batched per 600 virtual s",
+    ),
     "scale-100k": Scenario(
-        name="scale-100k", kind="sampling",
-        sim=SimConfig(scenario="scale-100k"),
-        note="vectorized 100k-MU latency sampling, aggregates only",
+        name="scale-100k", kind="train",
+        sim=SimConfig(scenario="scale-100k", discipline="async",
+                      compute_sigma=0.5, dropout=0.1, speed_mps=30.0,
+                      residency="move", fleet_mus_per_cluster=15_000,
+                      rate_model="single", reprice_interval_s=600.0),
+        hfl=dict(num_clusters=7, mus_per_cluster=4, period=2,
+                 sync_mode="sparse", async_dl_sparse=True, **PAPER_PHIS),
+        note="DEPRECATED alias of the scale-1m live path at 105k MUs "
+             "(the old aggregate-only sampling is run_scale_sampling)",
     ),
 }
 
@@ -125,6 +180,14 @@ SCENARIOS = {
 def get_scenario(name: str) -> Scenario:
     if name not in SCENARIOS:
         raise KeyError(f"unknown scenario {name!r}; choose from {sorted(SCENARIOS)}")
+    if name == "scale-100k":
+        warnings.warn(
+            "scenario 'scale-100k' used to SILENTLY sample latency "
+            "aggregates without training; it is now a deprecated alias of "
+            "the live 'scale-1m' path at ~105k MUs (real training + "
+            "mobility + residency). Use --scenario scale-1m going forward, "
+            "or call run_scale_sampling() for the old aggregates-only "
+            "sweep.", UserWarning, stacklevel=2)
     return SCENARIOS[name]
 
 
@@ -133,21 +196,23 @@ def apply_hfl_overrides(scn: Scenario, hfl_cfg: HFLConfig) -> HFLConfig:
     return dataclasses.replace(hfl_cfg, **scn.hfl) if scn.hfl else hfl_cfg
 
 
-def build_trace(sim: SimConfig, hfl_cfg: HFLConfig, topo: HCNTopology):
+def build_trace(sim: SimConfig, n_mus: int, topo: HCNTopology):
     """Mobility trace for a scenario: load ``trace_file`` if set, else run
-    the named synthetic generator; None when the scenario has neither."""
+    the named synthetic generator; None when the scenario has neither.
+    ``n_mus`` is the FLEET's MU count (which exceeds the training slots
+    when ``fleet_mus_per_cluster`` oversubscribes)."""
     from repro.sim import traces as tr
 
     if sim.trace_file is not None:
         trace = tr.MobilityTrace.load(sim.trace_file)
-        if trace.K != hfl_cfg.total_mus:
+        if trace.K != n_mus:
             raise ValueError(
-                f"trace {sim.trace_file} has {trace.K} MUs but the config "
-                f"needs N*K = {hfl_cfg.total_mus}")
+                f"trace {sim.trace_file} has {trace.K} MUs but the fleet "
+                f"needs {n_mus}")
         return trace
     if sim.trace_model is not None:
         return tr.generate(
-            sim.trace_model, hfl_cfg.total_mus, sim.trace_duration_s,
+            sim.trace_model, n_mus, sim.trace_duration_s,
             radius=topo.area_radius, seed=sim.seed,
             speed_mps=sim.trace_speed_mps if sim.trace_speed_mps > 0 else None,
             dt=sim.trace_dt_s,
@@ -163,10 +228,13 @@ def build_engine(
     seed: Optional[int] = None,
     trace_file: Optional[str] = None,
     residency: Optional[str] = None,
+    engine_cls: type = SimEngine,
 ) -> SimEngine:
     """Topology + fleet (+ mobility trace + residency tracker) + engine
     for a training scenario. ``trace_file``/``residency`` override the
-    scenario's ``SimConfig`` (the ``--trace-in``/``--residency`` CLI hooks).
+    scenario's ``SimConfig`` (the ``--trace-in``/``--residency`` CLI
+    hooks); ``engine_cls`` swaps the engine implementation (the
+    equivalence tests build ``sim.legacy.LegacySimEngine`` here).
     """
     assert scn.kind == "train", f"{scn.name} is a sampling scenario"
     sim = scn.sim
@@ -185,10 +253,14 @@ def build_engine(
         # with built-in mobility (e.g. mobility) silences its speed_mps
         sim = dataclasses.replace(sim, speed_mps=0.0)
     topo = HCNTopology(num_clusters=hfl_cfg.num_clusters, seed=sim.seed)
-    trace = build_trace(sim, hfl_cfg, topo)
+    # fleet size may oversubscribe the training slots (fleet-scale runs)
+    fleet_mpc = sim.fleet_mus_per_cluster or hfl_cfg.mus_per_cluster
+    trace = build_trace(sim, hfl_cfg.num_clusters * fleet_mpc, topo)
     fleet = DeviceFleet(
-        topo, hfl_cfg.mus_per_cluster,
+        topo, fleet_mpc,
         compute_sigma=sim.compute_sigma, dropout=sim.dropout,
+        diurnal_amp=sim.diurnal_amp, diurnal_period_s=sim.diurnal_period_s,
+        diurnal_phase=sim.diurnal_phase,
         speed_mps=sim.speed_mps, seed=sim.seed, trace=trace,
     )
     tracker = None
@@ -197,7 +269,7 @@ def build_engine(
 
         tracker = ResidencyTracker(fleet.cid, hfl_cfg.num_clusters,
                                    policy=sim.residency)
-    return SimEngine(
+    return engine_cls(
         period=hfl_cfg.period, hfl_cfg=hfl_cfg, sim_cfg=sim,
         topo=topo, fleet=fleet, lp=lp if lp is not None else LatencyParams(),
         residency=tracker,

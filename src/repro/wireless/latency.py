@@ -100,6 +100,7 @@ def hfl_latency(
     kw = dict(B0=lp.B0, Pmax=lp.p_mu, N0=lp.n0, alpha=lp.alpha, ber=lp.ber)
 
     gamma_ul, gamma_dl, mean_ul, mu_rates = [], [], [], []
+    mu_rate_flat = np.full(len(cid), np.inf)
     for n in range(topo.num_clusters):
         sel = cid == n
         if not np.any(sel):
@@ -111,6 +112,7 @@ def hfl_latency(
         d = topo.dist_to_sbs(mu_pos[sel], cid[sel])
         _, rates = allocate_subcarriers(d, m_cluster, **kw)
         mu_rates.append(rates)
+        mu_rate_flat[sel] = rates
         gamma_ul.append(bits_mu_ul / rates.min())
         mean_ul.append(rates.mean())
         gamma_dl.append(
@@ -146,4 +148,131 @@ def hfl_latency(
         # per-cluster per-MU UL rates (the simulator's deadline discipline
         # charges each MU its own UL time, not just the cluster min)
         "mu_rates": mu_rates, "m_cluster": m_cluster,
+        # the same rates scattered to MU-id order [K] (the vectorized
+        # engine prices whole fleets with one gather, no per-cluster lists)
+        "mu_rate_flat": mu_rate_flat,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Fleet-scale pricing (rate_model="single"): no per-MU sub-carrier allocation
+# ---------------------------------------------------------------------------
+#
+# Alg. 2's max-min allocation assumes every MU owns at least one of the M
+# sub-carriers, which stops being physical (and crashes) once a cluster
+# holds more MUs than sub-carriers. The *_single variants price fleets of
+# any size with the shared-single-subcarrier model the 100k latency sweep
+# established: each MU's UL rate is its optimal truncated-inversion M-QAM
+# rate on ONE sub-carrier (``qam.optimal_rate_vec``, streamed in chunks),
+# and the rateless broadcast DL is evaluated on the ``dl_probe`` farthest
+# members per cell — the worst-instantaneous-SNR minimum that governs the
+# rateless code is dominated by the far tail, so the probe subset is a
+# deterministic, cheap stand-in for the whole cell. Both return the same
+# aux schema as their exact counterparts (``mu_rates`` is None: per-cluster
+# rate lists would be fleet-sized; use ``mu_rate_flat``).
+
+
+def _farthest_subset(d: np.ndarray, limit: int) -> np.ndarray:
+    """Indices of the ``limit`` largest distances (any order)."""
+    if len(d) <= limit:
+        return np.arange(len(d))
+    return np.argpartition(d, len(d) - limit)[len(d) - limit:]
+
+
+def fl_latency_single(
+    topo: HCNTopology, mu_pos, lp: LatencyParams, *,
+    phi_ul=0.0, phi_dl=0.0, ul_bits=None, dl_bits=None,
+    dl_probe: int = 64, chunk: int = 1 << 18,
+):
+    """Fleet-scale ``fl_latency``: single-subcarrier UL, probe-subset DL."""
+    from repro.wireless.qam import optimal_rate_vec
+
+    d = topo.dist_to_mbs(mu_pos)
+    rates = optimal_rate_vec(
+        d, m=1, B0=lp.B0, Pmax=lp.p_mu, N0=lp.n0, alpha=lp.alpha, ber=lp.ber,
+        chunk=chunk)
+    ul_bits = lp.payload(phi_ul) if ul_bits is None else ul_bits
+    dl_bits = lp.payload(phi_dl) if dl_bits is None else dl_bits
+    t_ul = ul_bits / rates.min()
+    sub = _farthest_subset(d, dl_probe)
+    t_dl = broadcast_latency(
+        d[sub], dl_bits, M=lp.M, B0=lp.B0, Pmax=lp.p_mbs, N0=lp.n0,
+        alpha=lp.alpha)
+    return t_ul + t_dl, {"t_ul": t_ul, "t_dl": t_dl}
+
+
+def hfl_latency_single(
+    topo: HCNTopology,
+    mu_pos,
+    cid,
+    lp: LatencyParams,
+    *,
+    H: int = 1,
+    phi_mu_ul=0.0,
+    phi_sbs_dl=0.0,
+    phi_sbs_ul=0.0,
+    phi_mbs_dl=0.0,
+    reuse: int = 1,
+    payload_bits=None,
+    dl_probe: int = 64,
+    chunk: int = 1 << 18,
+):
+    """Fleet-scale ``hfl_latency``: one streamed ``optimal_rate_vec`` call
+    prices every MU at once; per-cluster reductions are ufunc scatters, so
+    cost is O(K) with no per-MU (or per-cluster) Python work on the rate
+    path. Same return contract as ``hfl_latency`` (``mu_rates`` aux is
+    None — use ``mu_rate_flat``)."""
+    from repro.wireless.qam import optimal_rate_vec
+
+    pb = payload_bits or {}
+    bits_mu_ul = pb.get("mu_ul", lp.payload(phi_mu_ul))
+    bits_sbs_dl = pb.get("sbs_dl", lp.payload(phi_sbs_dl))
+    bits_sbs_ul = pb.get("sbs_ul", lp.payload(phi_sbs_ul))
+    bits_mbs_dl = pb.get("mbs_dl", lp.payload(phi_mbs_dl))
+    colors, n_colors = topo.coloring(reuse)
+    m_cluster = lp.M // n_colors
+    N = topo.num_clusters
+    cid = np.asarray(cid)
+
+    d = topo.dist_to_sbs(mu_pos, cid)
+    rates = optimal_rate_vec(
+        d, m=1, B0=lp.B0, Pmax=lp.p_mu, N0=lp.n0, alpha=lp.alpha, ber=lp.ber,
+        chunk=chunk)
+
+    counts = np.bincount(cid, minlength=N)
+    nonempty = counts > 0
+    min_rate = np.full(N, np.inf)
+    np.minimum.at(min_rate, cid, rates)
+    sum_rate = np.zeros(N)
+    np.add.at(sum_rate, cid, rates)
+    gamma_ul = np.where(nonempty, bits_mu_ul / min_rate, 0.0)
+
+    # rateless broadcast on the dl_probe farthest members of each cell
+    gamma_dl = np.zeros(N)
+    order = np.lexsort((-d, cid))  # by cluster, farthest member first
+    starts = np.searchsorted(cid[order], np.arange(N + 1))
+    for n in np.nonzero(nonempty)[0]:
+        sub = order[starts[n]:min(starts[n] + dl_probe, starts[n + 1])]
+        gamma_dl[n] = broadcast_latency(
+            d[sub], bits_sbs_dl, M=m_cluster, B0=lp.B0, Pmax=lp.p_sbs,
+            N0=lp.n0, alpha=lp.alpha)
+
+    with np.errstate(invalid="ignore"):
+        mean_per_cluster = sum_rate[nonempty] / counts[nonempty]
+    fh_rate = (lp.fronthaul_gain * float(mean_per_cluster.mean())
+               if nonempty.any() else np.inf)
+    theta_u = bits_sbs_ul / fh_rate
+    theta_d = bits_mbs_dl / fh_rate
+
+    per_cluster = H * (gamma_ul + gamma_dl)
+    gamma_period = per_cluster.max() + theta_u + theta_d + gamma_dl.max()
+    per_iter = gamma_period / H
+    with np.errstate(divide="ignore", invalid="ignore"):
+        dl_rates = np.where(gamma_dl > 0, bits_sbs_dl / gamma_dl, np.inf)
+    return per_iter, {
+        "gamma_ul": gamma_ul, "gamma_dl": gamma_dl,
+        "theta_u": theta_u, "theta_d": theta_d,
+        "fh_rate": fh_rate, "dl_rates": dl_rates,
+        "mu_rates": None, "m_cluster": m_cluster,
+        "mu_rate_flat": rates,
     }
