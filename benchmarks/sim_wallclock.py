@@ -91,7 +91,67 @@ def run(periods: int = 2, seed: int = 0):
     rows.append(("scale-100k", {k: v for k, v in stats.items() if k != "scenario"}))
     rows.append(("scale-1m", run_scale_1m(cfg, loss_fn, opt, seed=seed)))
     rows.append(("pricing-100k", run_pricing_sweep(seed=seed)))
+    rows.append(("tracing-overhead", run_tracing_overhead(seed=seed)))
     return rows
+
+
+def run_tracing_overhead(periods: int = 2, seed: int = 0):
+    """Telemetry-overhead guard: the diurnal smoke with tracing fully on
+    (spans + metrics registry + host spans) vs off, sharing one pair of
+    warm jitted steps so only the instrumentation differs. The two runs
+    are bit-identical on the virtual clock (tested in test_obs.py); this
+    leg watches the HOST cost. All keys are host-dependent and therefore
+    informational in ``BENCH_sim.json`` (names deliberately outside
+    ``check_regression.GATED_KEY_RES``); the 0.9x floor prints a warning
+    rather than failing, mirroring the events/s convention of scale-1m."""
+    import sys
+
+    from repro.obs import ObsConfig
+
+    cfg = _tiny_cfg()
+    loss_fn = make_loss_fn(cfg)
+    opt = SGDM(momentum=0.9)
+    scn = SCENARIOS["diurnal"]
+    hfl = apply_hfl_overrides(
+        scn, HFLConfig(num_clusters=4, mus_per_cluster=3, period=4)
+    )
+    train = jax.jit(make_cluster_train_step(loss_fn, opt, lambda t: 0.1))
+    sync = jit_sync_step(make_sync_step(hfl, mesh=None))
+
+    def leg(obs):
+        engine = build_engine(scn, hfl, seed=seed, obs=obs)
+        state = hfl_init(init_model(jax.random.PRNGKey(seed), cfg), opt, hfl)
+        rng = np.random.default_rng(seed)
+        N, B = hfl.num_clusters, hfl.mus_per_cluster * 2
+
+        def batches():
+            while True:
+                toks = rng.integers(0, cfg.vocab_size, (N, B, 16))
+                yield {"tokens": jnp.asarray(toks)}
+
+        t0 = time.perf_counter()
+        _, trace = engine.run(state, train, sync, batches(),
+                              periods * hfl.period)
+        return len(trace.rows), time.perf_counter() - t0
+
+    leg(None)  # warm the jitted steps so neither timed leg pays compile
+    # best-of-2 per leg: the smoke is only ~10 events, so a single timing
+    # is dispatch-jitter-dominated on a busy host
+    ev_off, s_off = min((leg(None) for _ in range(2)), key=lambda r: r[1])
+    ev_on, s_on = min((leg(ObsConfig()) for _ in range(2)),
+                      key=lambda r: r[1])
+    assert ev_on == ev_off  # instrumentation is a pure observer
+    off, on = ev_off / s_off, ev_on / s_on
+    ratio = on / off
+    if ratio < 0.9:
+        print(f"[bench] WARNING: tracing overhead above budget: "
+              f"events/s on/off = {ratio:.3f} < 0.9", file=sys.stderr)
+    return {
+        "events": ev_off,
+        "events_per_s_tracing_off": off,
+        "events_per_s_tracing_on": on,
+        "tracing_on_over_off": ratio,
+    }
 
 
 def run_scale_1m(cfg, loss_fn, opt, periods: int = 2, seed: int = 0):

@@ -1,0 +1,3 @@
+"""Top-level ``launch`` shim: ``python -m launch.train`` == ``python -m
+repro.launch.train``.  Exists so command lines in docs and CI stay short;
+all real code lives in :mod:`repro.launch`."""

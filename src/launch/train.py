@@ -1,0 +1,5 @@
+"""Alias module — see :mod:`repro.launch.train`."""
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main()

@@ -63,6 +63,9 @@ class PayloadLedger:
     size: int  # Q: flat model length the payloads index into
     bits: Dict[str, float] = field(default_factory=lambda: {l: 0.0 for l in LINKS})
     events: Dict[str, int] = field(default_factory=lambda: {l: 0 for l in LINKS})
+    # live metrics mirror (repro.obs): when set, every record() also feeds
+    # the ``comm.bits`` / ``comm.payloads`` counters, labelled by link
+    registry: object = field(default=None, repr=False, compare=False)
 
     def record(self, link: str, bits, *, events: int = 1) -> float:
         if link not in self.bits:
@@ -70,6 +73,9 @@ class PayloadLedger:
         b = float(bits)
         self.bits[link] += b
         self.events[link] += events
+        if self.registry is not None:
+            self.registry.counter("comm.bits").inc(b, link=link)
+            self.registry.counter("comm.payloads").inc(events, link=link)
         return b
 
     @property

@@ -10,6 +10,8 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
+from repro.obs.config import ObsConfig
+
 # ---------------------------------------------------------------------------
 # Model configs
 # ---------------------------------------------------------------------------
@@ -282,6 +284,10 @@ class SimConfig:
     # re-price at every event (legacy); > 0 batches fleet movement and
     # re-pricing to at most once per interval (fleet-scale runs)
     reprice_interval_s: float = 0.0
+    # observability (repro.obs): None keeps telemetry fully off — the
+    # engine's emit sites collapse to one attribute check and runs stay
+    # bit-identical to the uninstrumented engine either way
+    obs: Optional[ObsConfig] = None
 
 
 # registry is populated by repro.configs.__init__

@@ -44,8 +44,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sparsify as sp
+from repro.obs.metrics import current_registry
 from repro.utils import flatten as fl
 from repro.utils import jaxcompat
+
+
+def _count_build(kind: str, **labels) -> None:
+    """Build-time bookkeeping into the ambient metrics registry: which
+    step builders ran, under which mode/layout/impl — the builders have no
+    telemetry handle to thread, and build time is off the hot path."""
+    reg = current_registry()
+    if reg.enabled:
+        reg.counter(f"hfl.{kind}_builds").inc(**labels)
 
 
 class HFLState(NamedTuple):
@@ -91,6 +101,7 @@ def serving_params(state: HFLState):
 
 def make_cluster_train_step(loss_fn: Callable, optimizer, lr_schedule):
     """loss_fn(params, batch) -> (loss, aux). batch leaves [N, localB, ...]."""
+    _count_build("train_step", masked="no")
 
     def train_step(state: HFLState, batch):
         lr = lr_schedule(state.step)
@@ -121,6 +132,7 @@ def make_masked_cluster_train_step(loss_fn: Callable, optimizer, lr_schedule):
     cluster axis); ``n`` is a traced int32 so one compiled program serves
     every cluster. Returns ``(state, loss)`` with ``loss`` a scalar.
     """
+    _count_build("train_step", masked="yes")
 
     def train_step(state: HFLState, batch_n, n):
         lr = lr_schedule(state.step)
@@ -766,6 +778,10 @@ def make_sync_step(hfl_cfg, mesh=None, param_specs=None, *, layout=None):
         the per-device "pod" shard_map on pod meshes).
     """
     mode = hfl_cfg.sync_mode
+    _count_build(
+        "sync_step", mode=mode,
+        layout=(layout or getattr(hfl_cfg, "sync_layout", "flat")),
+        impl=hfl_cfg.omega_impl)
     if mode == "dense":
 
         def dense_sync(state: HFLState):

@@ -16,6 +16,15 @@ wall-clock-vs-loss trace (``--trace-out`` to save it as JSON):
 
   PYTHONPATH=src python -m repro.launch.train --scenario paper-fig3 \
       --steps 8 --trace-out trace.json
+
+Observability (``repro.obs``): ``--trace-viz out.json`` exports a
+Chrome/Perfetto trace of every simulator event on the virtual clock plus
+host-clock jit-boundary spans; ``--metrics-out run.jsonl`` streams every
+console line as a structured JSONL event and appends the final metrics-
+registry snapshot; ``--obs-hlo-cost`` adds compile-time HLO flop/byte/launch
+analysis of the jitted steps. Reporting also splits first-step trace+compile
+time from the steady-state s/step (the historical figure silently folded the
+compile stall into every step).
 """
 from __future__ import annotations
 
@@ -39,6 +48,7 @@ from repro.data import SyntheticLM
 from repro.launch.steps import make_loss_fn
 from repro.models.frontends import fake_frontend_embeds
 from repro.models.transformer import forward, init_model
+from repro.obs import ObsConfig, RunLogger, StepClock, make_telemetry
 from repro.optim import SGDM, warmup_step_decay
 
 
@@ -122,7 +132,32 @@ def main(argv=None):
                          "pinned to birth slots; move = shard follows the "
                          "radio; duplicate = visited clusters keep a copy; "
                          "stale = tracked but never moves")
+    ap.add_argument("--trace-viz", default=None,
+                    help="export a Chrome/Perfetto trace-event JSON of the "
+                         "run (virtual-clock simulator spans + host-clock "
+                         "jit boundaries; load in chrome://tracing or "
+                         "ui.perfetto.dev). Scenario runs only.")
+    ap.add_argument("--metrics-out", default=None,
+                    help="stream structured run events as JSONL here "
+                         "(config, per-step losses, compile/steady timing, "
+                         "sim summary, final metrics-registry snapshot)")
+    ap.add_argument("--obs-heartbeat", type=int, default=0,
+                    help="print an events/s + live-memory heartbeat to "
+                         "stderr every N simulator events (0 = off)")
+    ap.add_argument("--obs-hlo-cost", action="store_true",
+                    help="analyze the jitted train/sync steps' HLO "
+                         "(flops, HBM bytes, collective bytes, launch "
+                         "count) at startup; costs one extra compile")
     args = ap.parse_args(argv)
+
+    obs_cfg = None
+    if (args.trace_viz or args.metrics_out or args.obs_heartbeat
+            or args.obs_hlo_cost):
+        obs_cfg = ObsConfig(
+            trace_path=args.trace_viz, metrics_path=args.metrics_out,
+            heartbeat_events=args.obs_heartbeat,
+            hlo_cost=bool(args.obs_hlo_cost))
+    log = RunLogger(args.metrics_out)
 
     scenario = None
     if args.scenario is not None:
@@ -134,11 +169,12 @@ def main(argv=None):
             # path) — kept for out-of-registry Scenario objects
             from repro.utils.format import format_metrics
             stats = _jsonable(run_scale_sampling(scenario))
-            print(f"[sim] {args.scenario}: "
-                  + format_metrics(stats, skip=("scenario",)))
+            log.log("sampling", f"[sim] {args.scenario}: "
+                    + format_metrics(stats, skip=("scenario",)), **stats)
             if args.trace_out:
                 with open(args.trace_out, "w") as f:
                     json.dump(stats, f, indent=1)
+            log.close()
             return stats, None
 
     cfg = get_config(args.arch)
@@ -154,10 +190,32 @@ def main(argv=None):
     if scenario is not None:
         from repro.sim.scenarios import apply_hfl_overrides
         hfl = apply_hfl_overrides(scenario, hfl)
-    print(f"[train] arch={cfg.name} clusters={hfl.num_clusters} "
-          f"mus/cluster={hfl.mus_per_cluster} H={hfl.period} sync={hfl.sync_mode} "
-          f"layout={hfl.sync_layout} omega={hfl.omega_impl}"
-          + (f" scenario={scenario.name}" if scenario is not None else ""))
+    log.log(
+        "config",
+        f"[train] arch={cfg.name} clusters={hfl.num_clusters} "
+        f"mus/cluster={hfl.mus_per_cluster} H={hfl.period} sync={hfl.sync_mode} "
+        f"layout={hfl.sync_layout} omega={hfl.omega_impl}"
+        + (f" scenario={scenario.name}" if scenario is not None else ""),
+        arch=cfg.name, clusters=hfl.num_clusters,
+        mus_per_cluster=hfl.mus_per_cluster, period=hfl.period,
+        sync=hfl.sync_mode, layout=hfl.sync_layout, omega=hfl.omega_impl,
+        payload_accounting=hfl.payload_accounting,
+        scenario=(scenario.name if scenario is not None else None),
+        steps=args.steps, seq=args.seq, batch_per_mu=args.batch_per_mu,
+    )
+
+    # the telemetry handle is created BEFORE the step builders run so their
+    # build-time counters land in this run's registry (the engine adopts
+    # the handle; non-scenario runs hold it directly)
+    engine = None
+    if scenario is not None:
+        from repro.sim.scenarios import build_engine
+        engine = build_engine(scenario, hfl, seed=args.sim_seed,
+                              trace_file=args.trace_in,
+                              residency=args.residency, obs=obs_cfg)
+        tele = engine.obs
+    else:
+        tele = make_telemetry(obs_cfg)
 
     params = init_model(jax.random.PRNGKey(0), cfg)
     opt = SGDM(momentum=0.9, weight_decay=1e-4)
@@ -176,65 +234,105 @@ def main(argv=None):
     local_b = hfl.mus_per_cluster * args.batch_per_mu
     F = cfg.frontend_tokens if cfg.frontend != "none" else 0
 
-    def batches():
+    def make_batches(lm_, rng_):
         while True:
-            toks = lm.sample(hfl.num_clusters * local_b, args.seq, rng)
+            toks = lm_.sample(hfl.num_clusters * local_b, args.seq, rng_)
             b = {"tokens": jnp.asarray(toks.reshape(hfl.num_clusters, local_b, args.seq))}
             if F:
-                fe = fake_frontend_embeds(jax.random.PRNGKey(int(rng.integers(1 << 30))),
+                fe = fake_frontend_embeds(jax.random.PRNGKey(int(rng_.integers(1 << 30))),
                                           cfg, hfl.num_clusters * local_b)
                 b["frontend"] = fe.reshape(hfl.num_clusters, local_b, *fe.shape[1:])
             yield b
 
+    if obs_cfg is not None and obs_cfg.hlo_cost:
+        from repro.obs import program_costs
+        # probe batch from an INDEPENDENT generator with the same seeds:
+        # the training data stream must not be perturbed by profiling
+        probe = next(make_batches(SyntheticLM(cfg.vocab_size, seed=1),
+                                  np.random.default_rng(2)))
+        costs = {"train_step": program_costs(train_step, state, probe),
+                 "sync_step": program_costs(sync_step, state)}
+        for k, c in costs.items():
+            if c:
+                log.log("hlo_cost",
+                        f"[obs] {k}: {c['flops']/1e9:.3f} GFLOP "
+                        f"{c['hbm_bytes']/1e6:.1f} MB HBM "
+                        f"{c.get('launches', 0)} launches", fn=k, **c)
+
     hist = []
-    t0 = time.time()
+    clock = StepClock()
 
     def on_step(t, s, loss):
-        l = float(loss.mean())
+        l = float(loss.mean())  # blocks until the step actually finished
+        clock.step()
         hist.append(l)
         if (t + 1) % args.log_every == 0:
-            print(f"  step {t+1:5d}  loss {l:.4f}  ({(time.time()-t0)/(t+1):.2f}s/step)")
+            ss = clock.steady_s_per_step
+            # steady rate once a post-compile sample exists; the first
+            # window falls back to the compile-inclusive mean
+            rate = (ss if ss is not None
+                    else (time.perf_counter() - clock.t0) / clock.steps)
+            log.log("step", f"  step {t+1:5d}  loss {l:.4f}  ({rate:.2f}s/step)",
+                    step=t + 1, loss=l, s_per_step=rate,
+                    steady=ss is not None)
 
     trace = None
     if scenario is not None:
         from repro.core.hfl import make_masked_cluster_train_step
-        from repro.sim.scenarios import build_engine
-        engine = build_engine(scenario, hfl, seed=args.sim_seed,
-                              trace_file=args.trace_in,
-                              residency=args.residency)
         # async/trace rounds advance ONE cluster: the masked step computes
         # only that cluster (~1/N the FLOPs of the vmapped step)
         masked_step = jax.jit(
             make_masked_cluster_train_step(loss_fn, opt, sched),
             donate_argnums=0)
-        state, trace = engine.run(state, train_step, sync_step, batches(),
+        state, trace = engine.run(state, train_step, sync_step,
+                                  make_batches(lm, rng),
                                   args.steps, on_step=on_step,
                                   masked_train_step=masked_step)
         m = trace.meta
-        print(f"[sim] scenario={scenario.name} discipline={m['discipline']} "
-              f"residency={m['residency']} "
-              f"virtual-wallclock={trace.wallclock:.3f}s "
-              f"syncs={m['sync_launches']} "
-              f"fronthaul={m['bits_fronthaul_total']/8e6:.2f}MB")
+        log.log("sim_summary",
+                f"[sim] scenario={scenario.name} discipline={m['discipline']} "
+                f"residency={m['residency']} "
+                f"virtual-wallclock={trace.wallclock:.3f}s "
+                f"syncs={m['sync_launches']} "
+                f"fronthaul={m['bits_fronthaul_total']/8e6:.2f}MB",
+                **_jsonable(m))
         if m.get("payload_accounting") == "measured":
             bpp = m.get("bits_per_param_mean")
-            print(f"[sim] measured payloads: codec={m['codec']} "
-                  f"Q={m['payload_size']} "
-                  f"sbs_ul={m['bits_sbs_ul']/8e6:.3f}MB "
-                  f"mbs_dl={m['bits_mbs_dl']/8e6:.3f}MB "
-                  + (f"bits/param={bpp:.3f}" if bpp is not None else ""))
+            log.log("sim_measured",
+                    f"[sim] measured payloads: codec={m['codec']} "
+                    f"Q={m['payload_size']} "
+                    f"sbs_ul={m['bits_sbs_ul']/8e6:.3f}MB "
+                    f"mbs_dl={m['bits_mbs_dl']/8e6:.3f}MB "
+                    + (f"bits/param={bpp:.3f}" if bpp is not None else ""))
         if m.get("wireless"):
-            print(f"[sim] t_fl_iter={m['t_fl_iter_s']:.3f}s "
-                  f"t_hfl_iter={m['t_hfl_iter_s']:.3f}s "
-                  f"t_hfl_period={m['t_hfl_period_s']:.3f}s "
-                  f"(period<fl_iter: {m['t_hfl_period_s'] < m['t_fl_iter_s']})")
+            log.log("sim_latency",
+                    f"[sim] t_fl_iter={m['t_fl_iter_s']:.3f}s "
+                    f"t_hfl_iter={m['t_hfl_iter_s']:.3f}s "
+                    f"t_hfl_period={m['t_hfl_period_s']:.3f}s "
+                    f"(period<fl_iter: {m['t_hfl_period_s'] < m['t_fl_iter_s']})")
         if args.trace_out:
             with open(args.trace_out, "w") as f:
                 json.dump(_jsonable(trace.to_json()), f, indent=1)
-            print(f"[sim] trace -> {args.trace_out}")
+            log.log("trace_out", f"[sim] trace -> {args.trace_out}",
+                    path=args.trace_out)
+        if args.trace_viz and tele.enabled:
+            tele.export_chrome(args.trace_viz,
+                               metadata={"engine_meta": _jsonable(m)})
+            log.log("trace_viz", f"[obs] chrome trace -> {args.trace_viz}",
+                    path=args.trace_viz, events=len(tele.tracer.events),
+                    dropped=tele.tracer.dropped)
     else:
-        state = run_hfl(state, train_step, sync_step, batches(), hfl.period,
-                        args.steps, on_step)
+        state = run_hfl(state, train_step, sync_step, make_batches(lm, rng),
+                        hfl.period, args.steps, on_step)
+
+    timing = clock.summary()
+    if timing["steps"]:
+        cs, ss = timing["compile_s"], timing["steady_s_per_step"]
+        log.log("timing",
+                f"[train] compile_s={cs:.2f}"
+                + (f"  steady={ss:.3f}s/step" if ss is not None
+                   else "  (one step; no steady-state sample)"),
+                **timing)
 
     # held-out eval with the consensus model
     sp = serving_params(state)
@@ -244,14 +342,22 @@ def main(argv=None):
     lp = jax.nn.log_softmax(logits[:, -args.seq:].astype(jnp.float32), -1)
     eval_loss = float(-jnp.take_along_axis(lp[:, :-1], toks[:, 1:, None], -1).mean())
     if hist:  # async with steps < H completes zero rounds -> no train losses
-        print(f"[train] first-loss={hist[0]:.4f} last-loss={hist[-1]:.4f} "
-              f"eval-loss={eval_loss:.4f}")
+        log.log("eval",
+                f"[train] first-loss={hist[0]:.4f} last-loss={hist[-1]:.4f} "
+                f"eval-loss={eval_loss:.4f}",
+                first_loss=hist[0], last_loss=hist[-1], eval_loss=eval_loss)
     else:
-        print(f"[train] no training rounds completed; eval-loss={eval_loss:.4f}")
+        log.log("eval",
+                f"[train] no training rounds completed; "
+                f"eval-loss={eval_loss:.4f}", eval_loss=eval_loss)
 
     if args.ckpt_dir:
         path = save_checkpoint(args.ckpt_dir, args.steps, state._asdict())
-        print(f"[train] checkpoint -> {path}")
+        log.log("checkpoint", f"[train] checkpoint -> {path}", path=str(path))
+    if tele.enabled:
+        # final registry snapshot: JSONL-only (it is large and structured)
+        log.log("metrics", None, metrics=tele.registry.snapshot())
+    log.close()
     # one return shape for every mode; the wall-clock trace is exposed via
     # --trace-out (scenario runs) rather than a third tuple element
     return hist, eval_loss

@@ -1,0 +1,116 @@
+"""JAX profiling hooks: compile vs steady timing, HLO costs, live memory.
+
+Three small tools, all host-side and backend-agnostic:
+
+  * ``StepClock`` — splits wall time into first-step (trace + jit
+    compile) and steady-state. The historical ``s/step`` figure divided
+    total elapsed by step count, silently folding the compile stall into
+    every step; ``compile_s`` and ``steady_s_per_step`` report the two
+    separately.
+  * ``program_costs`` — lowers/compiles a jitted callable once and runs
+    the trip-count-aware ``launch/hlo_cost`` analysis over the HLO text:
+    flops, HBM bytes, collective bytes, plus a top-level launch count
+    (entry instructions that actually dispatch work). One extra compile —
+    opt-in via ``ObsConfig.hlo_cost``.
+  * ``live_bytes`` — current live device-array footprint (the heartbeat's
+    peak-memory proxy; works on CPU where ``memory_stats`` is absent).
+"""
+from __future__ import annotations
+
+import time
+
+# entry-computation ops that dispatch no device work
+_NO_LAUNCH_OPS = frozenset((
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id",
+))
+
+
+class StepClock:
+    """Wall-clock accountant for a jitted step loop.
+
+    Call ``step()`` after each completed step; the first completion marks
+    the end of trace+compile. ``steady_s_per_step`` averages strictly
+    post-compile steps (None until a second step lands).
+    """
+
+    def __init__(self):
+        self.t0 = time.perf_counter()
+        self._t_first = None
+        self._steps = 0
+
+    def step(self) -> None:
+        self._steps += 1
+        if self._t_first is None:
+            self._t_first = time.perf_counter()
+
+    @property
+    def steps(self) -> int:
+        return self._steps
+
+    @property
+    def compile_s(self):
+        """First-step wall time (trace + compile + one execution)."""
+        return (None if self._t_first is None
+                else self._t_first - self.t0)
+
+    @property
+    def steady_s_per_step(self):
+        if self._t_first is None or self._steps < 2:
+            return None
+        return (time.perf_counter() - self._t_first) / (self._steps - 1)
+
+    def summary(self) -> dict:
+        return {"steps": self._steps, "compile_s": self.compile_s,
+                "steady_s_per_step": self.steady_s_per_step}
+
+
+def program_costs(fn, *args, **kwargs) -> dict:
+    """Lower + compile ``fn(*args)`` and analyze the HLO: trip-count-aware
+    flops/bytes/collective bytes (``launch/hlo_cost``) plus the top-level
+    launch count. Returns ``{}`` when the backend/jax version exposes no
+    compiled text (the hooks degrade, they never fail a run)."""
+    try:
+        compiled = fn.lower(*args, **kwargs).compile()
+        txt = compiled.as_text()
+    except Exception:
+        return {}
+    from repro.launch.hlo_cost import HloCost
+
+    try:
+        hc = HloCost(txt)
+        cost = hc.entry_cost()
+        entry = hc.entry
+        launches = None
+        if entry is not None and entry in hc.comps:
+            launches = sum(1 for ins in hc.comps[entry]
+                           if ins.op not in _NO_LAUNCH_OPS)
+        out = {"flops": cost["flops"], "hbm_bytes": cost["bytes"],
+               "collective_bytes": float(sum(cost["coll"].values()))}
+        if launches is not None:
+            out["launches"] = launches
+        return out
+    except Exception:
+        return {}
+
+
+def live_bytes() -> float:
+    """Bytes of live device arrays (CPU-safe peak-memory proxy)."""
+    try:
+        import jax
+
+        return float(sum(getattr(a, "nbytes", 0) for a in jax.live_arrays()))
+    except Exception:
+        return 0.0
+
+
+def device_memory_stats() -> dict:
+    """Best-effort ``device.memory_stats()`` of the default device
+    (empty on backends that expose none, e.g. CPU)."""
+    try:
+        import jax
+
+        stats = jax.devices()[0].memory_stats()
+        return dict(stats) if stats else {}
+    except Exception:
+        return {}

@@ -1,0 +1,43 @@
+"""Structured run logger: console lines + optional JSONL stream.
+
+``launch/train.py``'s reporting goes through this instead of ad-hoc
+``print()``: every event is one console line (same human-readable format
+as before) AND, with ``--metrics-out run.jsonl``, one JSON object per line
+with the machine-readable fields — so a run's config, per-step losses,
+compile/steady timing, simulator summary, and the final metrics-registry
+snapshot are all greppable/parseable after the fact.
+
+JSONL schema: ``{"event": <kind>, "t_host_s": <since logger start>, ...}``
+with event-specific fields; numpy scalars are converted on the way out.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from repro.obs.spans import to_jsonable
+
+
+class RunLogger:
+    """Console + JSONL event logger (``close()`` flushes the stream)."""
+
+    def __init__(self, jsonl_path=None, echo: bool = True):
+        self.echo = echo
+        self._t0 = time.perf_counter()
+        self._f = open(jsonl_path, "w") if jsonl_path else None
+
+    def log(self, event: str, msg=None, **fields) -> None:
+        """One event: ``msg`` is the console line (skipped when None),
+        ``fields`` are the JSONL payload."""
+        if self.echo and msg is not None:
+            print(msg)
+        if self._f is not None:
+            rec = {"event": event,
+                   "t_host_s": time.perf_counter() - self._t0}
+            rec.update(to_jsonable(fields))
+            self._f.write(json.dumps(rec) + "\n")
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None

@@ -88,6 +88,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import HFLConfig, SimConfig
+from repro.obs.telemetry import make_telemetry
 from repro.sim.devices import DeviceFleet
 from repro.sim.events import Event, EventQueue
 from repro.wireless.latency import (
@@ -304,6 +305,7 @@ class SimEngine:
         lp: Optional[LatencyParams] = None,
         record: bool = True,
         residency=None,
+        obs=None,
     ):
         # record=False skips trace rows (and the per-step loss
         # materialisation they force): the run_hfl adapter discards the
@@ -313,6 +315,14 @@ class SimEngine:
         self.period = int(period)
         self.hfl = hfl_cfg
         self.sim = sim_cfg if sim_cfg is not None else SimConfig()
+        # telemetry (repro.obs): an explicit handle wins (callers sharing
+        # one tracer across runs); otherwise resolved from SimConfig.obs.
+        # The default collapses to the shared NULL_TELEMETRY whose
+        # ``enabled`` flag guards every emit site — virtual time, bit
+        # totals and RNG draws are never touched by instrumentation, so
+        # runs stay bit-identical with tracing on, off, or absent.
+        self.obs = obs if obs is not None else make_telemetry(
+            getattr(self.sim, "obs", None))
         self.topo, self.fleet, self.lp = topo, fleet, lp
         self.wireless = topo is not None and fleet is not None and lp is not None
         # oversubscribed fleets: more physical MUs than training slots
@@ -413,6 +423,7 @@ class SimEngine:
         self._bits_access = 0.0
         self._bits_fronthaul = 0.0
         self._slot_rot = 0
+        self.obs.reset_run()
         self._setup_measured(state)
         disc = self.sim.discipline
         if disc in ("lockstep", "deadline"):
@@ -454,7 +465,9 @@ class SimEngine:
                 f"sync's wire format is {wire}: measured bits price a "
                 f"fidelity the simulation does not exchange", stacklevel=2)
         Q = fl.spec_of(state.w_ref).total
-        self.ledger = acct.PayloadLedger(codec=self._codec.name, size=Q)
+        self.ledger = acct.PayloadLedger(
+            codec=self._codec.name, size=Q,
+            registry=self.obs.registry if self.obs.enabled else None)
         self._probe = acct.make_sync_probe(self.hfl, self._codec)
         self._ab = {
             "mu_ul": acct.access_bits(self._codec, Q, self.hfl.phi_mu_ul),
@@ -633,6 +646,17 @@ class SimEngine:
             participants=int(mask.sum()),
             deadline_s=deadline_s,
         )
+        if self.obs.enabled:
+            # per-cluster phase decomposition for the trace viz (time
+            # only, clamped to surviving clusters; payload bits ride the
+            # link spans, one per ledger record)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                ctx["phases"] = {
+                    "surv": surv,
+                    "comp": np.where(surv > 0, comp_term, 0.0),
+                    "ul": np.where(surv > 0, ul_pay / min_rate, 0.0),
+                    "dl": np.where(surv > 0, aux["gamma_dl"], 0.0),
+                }
         if src is not None:
             # accounting charges the DISTINCT shards that actually train
             ctx["src"] = src
@@ -641,7 +665,7 @@ class SimEngine:
             ctx["active_clusters"] = int((src[:, 0] >= 0).sum())
         return ctx
 
-    def _advance_fleet(self, dt: float) -> None:
+    def _advance_fleet(self, dt: float, now: Optional[float] = None) -> None:
         """Advance positions (waypoint integration or trace replay),
         re-associate to the nearest SBS, propagate the new association to
         the residency tracker, and invalidate the cached radio pricing.
@@ -651,6 +675,10 @@ class SimEngine:
         advance/re-associate/re-price covers it all (positions integrate
         the full accumulated budget, so distance travelled is conserved).
         0 keeps the legacy every-event cadence bit-identically.
+
+        ``now`` is the virtual time of the triggering event: with telemetry
+        on, each effective advance lands as a ``reprice`` instant on the
+        fleet track carrying the covered motion and re-association count.
         """
         if self.fleet is None or not self.fleet.mobile:
             return
@@ -659,12 +687,21 @@ class SimEngine:
             if self._move_accum < self.sim.reprice_interval_s:
                 return
             dt, self._move_accum = self._move_accum, 0.0
+        spans = self.obs.enabled and now is not None
+        old_cid = self.fleet.cid.copy() if spans else None
         self.fleet.advance(dt)
         self.fleet.reassociate()
         if self.residency is not None:
             self.residency.update(self.fleet.cid)
         self._aux = None  # positions changed: re-price the radio
         self._crt = None  # per-cluster round times follow the pricing
+        if spans:
+            moved = int((self.fleet.cid != old_cid).sum())
+            self.obs.tracer.instant(
+                "reprice", track="fleet", t=now,
+                args={"dt_s": dt, "reassociations": moved})
+            self.obs.registry.counter("sim.reprices").inc()
+            self.obs.registry.counter("sim.reassociations").inc(moved)
 
     # --- data residency ---------------------------------------------------
 
@@ -817,10 +854,14 @@ class SimEngine:
 
     # --- byte accounting --------------------------------------------------
 
-    def _count_train(self, participants: Optional[int], clusters: int) -> None:
+    def _count_train(self, participants: Optional[int], clusters: int):
+        """-> ``(ul_bits, dl_bits)`` charged to the access links this
+        launch (zeros in null-wireless mode). Measured mode returns the
+        ledger's own recorded floats so the caller's link spans mirror the
+        books exactly (the teardown conservation check is bit-for-bit)."""
         self._train_launches += 1
         if not self.wireless:
-            return
+            return 0.0, 0.0
         p = self.fleet.K if participants is None else participants
         if self.ledger is not None:
             # access links are never materialized by the fused train step:
@@ -829,29 +870,34 @@ class SimEngine:
             dl = self.ledger.record(
                 "sbs_dl", clusters * self._ab["sbs_dl"], events=clusters
             )
-            self._bits_access += ul + dl
         else:
             lp, hfl = self.lp, self.hfl
-            self._bits_access += (
-                p * lp.payload(hfl.phi_mu_ul) + clusters * lp.payload(hfl.phi_sbs_dl)
-            )
+            ul = p * lp.payload(hfl.phi_mu_ul)
+            dl = clusters * lp.payload(hfl.phi_sbs_dl)
+        self._bits_access += ul + dl
+        return ul, dl
 
-    def _count_sync(self, clusters: int) -> None:
+    def _count_sync(self, clusters: int):
+        """Analytic fronthaul charge -> ``(ul_bits, dl_bits)``."""
         self._sync_launches += 1
-        if self.wireless:
-            lp, hfl = self.lp, self.hfl
-            self._bits_fronthaul += (
-                clusters * lp.payload(hfl.phi_sbs_ul) + lp.payload(hfl.phi_mbs_dl)
-            )
+        if not self.wireless:
+            return 0.0, 0.0
+        lp, hfl = self.lp, self.hfl
+        ul = clusters * lp.payload(hfl.phi_sbs_ul)
+        dl = lp.payload(hfl.phi_mbs_dl)
+        self._bits_fronthaul += ul + dl
+        return ul, dl
 
-    def _count_sync_measured(self, ul_bits, dl_bits: float) -> None:
-        """Record the REAL fronthaul payload bits of one sync event."""
+    def _count_sync_measured(self, ul_bits, dl_bits: float):
+        """Record the REAL fronthaul payload bits of one sync event
+        -> the ledger's recorded ``(ul_bits, dl_bits)`` floats."""
         self._sync_launches += 1
         ul_bits = np.atleast_1d(np.asarray(ul_bits, np.float64))
         ul = self.ledger.record("sbs_ul", float(ul_bits.sum()),
                                 events=len(ul_bits))
         dl = self.ledger.record("mbs_dl", float(dl_bits))
         self._bits_fronthaul += ul + dl
+        return ul, dl
 
     def _totals(self) -> dict:
         out = {
@@ -863,6 +909,73 @@ class SimEngine:
         if self.ledger is not None:
             out.update(self.ledger.summary())
         return out
+
+    def _finish_run(self) -> None:
+        """Engine teardown: final registry totals, then the span/ledger
+        payload-bit conservation bugcheck (measured accounting) — every
+        link's span bits must equal the ledger's total bit-for-bit."""
+        if not self.obs.enabled:
+            return
+        reg = self.obs.registry
+        reg.counter("sim.train_launches").inc(self._train_launches)
+        reg.counter("sim.sync_launches").inc(self._sync_launches)
+        reg.counter("sim.bits_access").inc(self._bits_access)
+        reg.counter("sim.bits_fronthaul").inc(self._bits_fronthaul)
+        if self.ledger is not None:
+            self.obs.check_conservation(self.ledger)
+
+    # --- span emission (telemetry on only; never touches sim state) ------
+
+    def _trace_train_step(self, step: int, t0: float, ctx: dict,
+                          ul_bits: float, dl_bits: float) -> None:
+        """Virtual-clock spans of one lockstep training iteration: the
+        engine-track iter span, per-cluster compute/UL/DL phase spans, and
+        the two access-link payload spans (bits = the ledger's floats)."""
+        tr = self.obs.tracer
+        dur = ctx["iter_s"]
+        tr.span("iter", track="engine", t0=t0, dur=dur,
+                args={"step": step, "dropped": ctx["dropped"],
+                      "participants": ctx["participants"]})
+        ph = ctx.get("phases")
+        if ph is not None:
+            for n in np.nonzero(ph["surv"] > 0)[0]:
+                tt = t0
+                for phase in ("comp", "ul", "dl"):
+                    d = float(ph[phase][n])
+                    tr.span(phase, track=f"cluster{int(n)}", t0=tt, dur=d)
+                    tt += d
+        if self.wireless:
+            tr.link_span("mu_ul", t0=t0, dur=dur, bits=ul_bits,
+                         name="train_ul",
+                         args={"participants": ctx["participants"]})
+            tr.link_span("sbs_dl", t0=t0, dur=dur, bits=dl_bits,
+                         name="train_dl")
+
+    def _trace_sync(self, step: int, t0: float, sync_s: float,
+                    ul_bits: float, dl_bits: float, bcast_bits,
+                    fh_parts, extra: dict) -> None:
+        """Virtual-clock spans of one global consensus: the engine-track
+        sync span plus fronthaul UL/DL link spans and (measured mode) the
+        repriced SBS->MU broadcast span. ``fh_parts`` carries the measured
+        per-leg durations; the analytic path falls back to the aux θ's."""
+        tr = self.obs.tracer
+        tr.span("sync", track="engine", t0=t0, dur=sync_s,
+                args={"step": step, **extra})
+        if not self.wireless:
+            return
+        if fh_parts is not None:
+            fh_ul, fh_dl, t_bc = fh_parts
+        else:
+            aux = self._latency_aux()
+            fh_ul, fh_dl = float(aux["theta_u"]), float(aux["theta_d"])
+            t_bc = max(sync_s - fh_ul - fh_dl, 0.0)
+        tr.link_span("sbs_ul", t0=t0, dur=fh_ul, bits=ul_bits,
+                     name="sync_ul")
+        tr.link_span("mbs_dl", t0=t0 + fh_ul, dur=fh_dl, bits=dl_bits,
+                     name="sync_dl")
+        if bcast_bits is not None:
+            tr.link_span("sbs_dl", t0=t0 + fh_ul + fh_dl, dur=t_bc,
+                         bits=bcast_bits, name="sync_bcast")
 
     # --- lockstep / deadline ---------------------------------------------
 
@@ -888,28 +1001,34 @@ class SimEngine:
             else:
                 batch = self._apply_participation(next(it), ctx["mask"])
                 keep = ctx["keep_clusters"]
-            new_state, loss = train_step(state, batch)
+            with self.obs.host_span("train_step"):
+                new_state, loss = train_step(state, batch)
             if keep is not None:
                 state = _merge_clusters(state, new_state, keep)
             else:
                 state = new_state
+            t_iter0 = t
             t += ctx["iter_s"]
-            self._count_train(
+            ul_b, dl_b = self._count_train(
                 ctx["participants"],
                 ctx.get("active_clusters", N if N is not None else 1))
+            if self.obs.enabled:
+                self._trace_train_step(step, t_iter0, ctx, ul_b, dl_b)
             if self._record:
                 trace.add(kind="train", t=t, step=step,
                           loss=float(jnp.mean(loss)), dropped=ctx["dropped"])
             if (step + 1) % H == 0:
                 sync_s = ctx["sync_s"]
                 row_extra = {}
+                sync_ul = sync_dl = 0.0
+                bcast_b = fh_parts = None
                 if self.ledger is not None:
                     # measure the REAL fronthaul payloads this sync sends
                     # (before the donating sync step consumes the state)
                     # and re-price θ^U/θ^D from the actual bit counts
                     ul_b, dl_b = self._probe(state)
                     ul_b, dl_b = np.asarray(ul_b, np.float64), float(dl_b)
-                    self._count_sync_measured(ul_b, dl_b)
+                    sync_ul, sync_dl = self._count_sync_measured(ul_b, dl_b)
                     aux = self._latency_aux()
                     # the post-consensus SBS->MU broadcast carries the
                     # ACTUAL consensus payload (dl_b bits), not the static
@@ -923,9 +1042,9 @@ class SimEngine:
                     t_bcast = np.where(finite, dl_b / aux["dl_rates"], 0.0)
                     n_bcast = int(finite.sum())
                     if n_bcast:
-                        bb = self.ledger.record(
+                        bcast_b = self.ledger.record(
                             "sbs_dl", n_bcast * dl_b, events=n_bcast)
-                        self._bits_access += bb
+                        self._bits_access += bcast_b
                     sync_s = float(
                         (ul_b.max() + dl_b) / aux["fh_rate"]
                         + (t_bcast[finite].max() if n_bcast else 0.0)
@@ -933,19 +1052,35 @@ class SimEngine:
                     row_extra = {"bits_sbs_ul": float(ul_b.sum()),
                                  "bits_mbs_dl": dl_b,
                                  "bits_sync_bcast": n_bcast * dl_b}
+                    if self.obs.enabled:
+                        # viz-only leg durations; sync_s itself stays the
+                        # single fused expression above (bit-identity)
+                        fh_parts = (
+                            float(ul_b.max()) / aux["fh_rate"],
+                            dl_b / aux["fh_rate"],
+                            float(t_bcast[finite].max()) if n_bcast else 0.0,
+                        )
                 else:
-                    self._count_sync(N if N is not None else 1)
-                state = sync_step(state)
+                    sync_ul, sync_dl = self._count_sync(
+                        N if N is not None else 1)
+                with self.obs.host_span("sync_step"):
+                    state = sync_step(state)
+                t_sync0 = t
                 t += sync_s
+                if self.obs.enabled:
+                    self._trace_sync(step, t_sync0, sync_s, sync_ul,
+                                     sync_dl, bcast_b, fh_parts, row_extra)
                 if self._record:
                     trace.add(kind="sync", t=t, step=step,
                               dropped=ctx["dropped"],
                               deadline_s=ctx["deadline_s"],
                               iter_s=ctx["iter_s"], sync_s=sync_s,
                               **row_extra)
-                self._advance_fleet(H * ctx["iter_s"] + sync_s)
+                self._advance_fleet(H * ctx["iter_s"] + sync_s, now=t)
             if on_step is not None:
                 on_step(step, state, loss)
+            self.obs.tick()
+        self._finish_run()
         trace.meta.update(self._totals())
         return state, trace
 
@@ -1015,11 +1150,14 @@ class SimEngine:
         steps_done = 0
         fleet_time = 0.0
         mpc = hfl.mus_per_cluster
+        # per-cluster round start times (virtual): round r of cluster n
+        # occupies [round_t0[n], its pop time]; tracked for the trace spans
+        round_t0 = np.zeros(N)
         while len(q):
             t, ev = q.pop()
             n = ev.cluster
             if self.fleet is not None and self.fleet.mobile:
-                self._advance_fleet(t - fleet_time)
+                self._advance_fleet(t - fleet_time, now=t)
                 fleet_time = t
             # availability trace (dropout): unavailable MUs in this cluster's
             # data slots — static layout, or the resident shards when a
@@ -1047,6 +1185,13 @@ class SimEngine:
                     if self._record:
                         trace.add(kind="idle", t=t, cluster=int(n),
                                   round=int(ev.round), dropped=dropped)
+                    if self.obs.enabled:
+                        self.obs.tracer.span(
+                            "idle", track=f"cluster{n}", t0=round_t0[n],
+                            dur=t - round_t0[n],
+                            args={"round": int(ev.round), "dropped": dropped})
+                    round_t0[n] = t
+                    self.obs.tick()
                     if ev.round + 1 < rounds:
                         q.push(t + self._cluster_round_time(n, comp),
                                Event("cluster_done", cluster=n,
@@ -1059,6 +1204,13 @@ class SimEngine:
                     if self._record:
                         trace.add(kind="idle", t=t, cluster=int(n),
                                   round=int(ev.round), dropped=dropped)
+                    if self.obs.enabled:
+                        self.obs.tracer.span(
+                            "idle", track=f"cluster{n}", t0=round_t0[n],
+                            dur=t - round_t0[n],
+                            args={"round": int(ev.round), "dropped": dropped})
+                    round_t0[n] = t
+                    self.obs.tick()
                     if ev.round + 1 < rounds:
                         q.push(t + self._cluster_round_time(n, comp),
                                Event("cluster_done", cluster=n,
@@ -1079,14 +1231,37 @@ class SimEngine:
             participants = (min(n_res - dropped, mpc)
                             if self.residency is not None
                             else max(members - dropped, 0))
+            # staleness is fixed before this round's own consensus lands
+            # (the train loop never touches the global update counter):
+            # compute the round's weight up front so the trace's round span
+            # is emitted first — per-track span starts stay monotone
+            staleness = global_updates - last_pull[n]
+            w = async_weight(staleness, N, self.sim.staleness_exp)
+            iter_w = sync_tail = 0.0
+            if self.obs.enabled:
+                # round window [round_t0, t]: H iteration windows plus the
+                # θ^U+θ^D sync tail (clamped — pricing may have moved since
+                # the round was scheduled); viz decomposition only
+                W = t - round_t0[n]
+                if self.wireless:
+                    aux = self._latency_aux()
+                    sync_tail = min(float(aux["theta_u"] + aux["theta_d"]),
+                                    W)
+                iter_w = max(W - sync_tail, 0.0) / H
+                self.obs.tracer.span(
+                    "round", track=f"cluster{n}", t0=round_t0[n], dur=W,
+                    args={"round": int(ev.round),
+                          "staleness": int(staleness),
+                          "weight": float(w), "dropped": dropped})
             # state.step feeds step-indexed LR schedules; pin it to THIS
             # cluster's per-round progress (round*H .. round*H + H), not the
             # global launch count, which inflates N-fold under async and
             # would decay the schedule N times too early.
             state = state._replace(step=jnp.asarray(ev.round * H, jnp.int32))
             nj = jnp.int32(n)
+            wj = jnp.float32(w)
             loss = None
-            for _ in range(H):
+            for h in range(H):
                 batch = next(it)
                 if masked_train_step is not None:
                     # masked step: compute ONLY the active cluster (~1/N
@@ -1099,37 +1274,63 @@ class SimEngine:
                             lambda l: (l[n] if getattr(l, "ndim", 0) >= 2
                                        else l),
                             self._apply_participation(batch, mask))
-                    state, loss = masked_train_step(state, batch_n, nj)
+                    with self.obs.host_span("train_step"):
+                        state, loss = masked_train_step(state, batch_n, nj)
                 else:
                     if self.residency is not None:
                         batch, _keep = self._gather_batch(batch, src)
                     else:
                         batch = self._apply_participation(batch, mask)
-                    new_state, loss = train_step(state, batch)
+                    with self.obs.host_span("train_step"):
+                        new_state, loss = train_step(state, batch)
                     state = _take_cluster_row(state, new_state, n)
                 steps_done += 1
-                self._count_train(participants, 1)
-            staleness = global_updates - last_pull[n]
-            w = async_weight(staleness, N, self.sim.staleness_exp)
-            wj = jnp.float32(w)
+                ul_b, dl_b = self._count_train(participants, 1)
+                if self.obs.enabled and self.wireless:
+                    # async link spans live on the cluster track: rounds
+                    # overlap across clusters, so shared link tracks would
+                    # break per-track time ordering
+                    it0 = round_t0[n] + h * iter_w
+                    tr_ = self.obs.tracer
+                    tr_.link_span("mu_ul", t0=it0, dur=iter_w, bits=ul_b,
+                                  name="train_ul", track=f"cluster{n}")
+                    tr_.link_span("sbs_dl", t0=it0, dur=iter_w, bits=dl_b,
+                                  name="train_dl", track=f"cluster{n}")
             bits = None
-            if dl_sparse and measured:
-                state, e_dl, bits = sync_n(state, e_dl, nj, wj)
-            elif dl_sparse:
-                state, e_dl = sync_n(state, e_dl, nj, wj)
-            elif measured:
-                state, bits = sync_n(state, nj, wj)
-            else:
-                state = sync_n(state, nj, wj)
+            with self.obs.host_span("sync_step"):
+                if dl_sparse and measured:
+                    state, e_dl, bits = sync_n(state, e_dl, nj, wj)
+                elif dl_sparse:
+                    state, e_dl = sync_n(state, e_dl, nj, wj)
+                elif measured:
+                    state, bits = sync_n(state, nj, wj)
+                else:
+                    state = sync_n(state, nj, wj)
             global_updates += 1
             last_pull[n] = global_updates
             if measured:
                 # dense adoption pulls the whole reference: static Q bits
                 dl_b = (float(bits["mbs_dl"]) if dl_sparse
                         else float(self._ab["dense"]))
-                self._count_sync_measured([float(bits["sbs_ul"])], dl_b)
+                s_ul, s_dl = self._count_sync_measured(
+                    [float(bits["sbs_ul"])], dl_b)
             else:
-                self._count_sync(1)
+                s_ul, s_dl = self._count_sync(1)
+            if self.obs.enabled:
+                tr_ = self.obs.tracer
+                t_s0 = t - sync_tail
+                tr_.span("sync", track=f"cluster{n}", t0=t_s0,
+                         dur=sync_tail,
+                         args={"round": int(ev.round),
+                               "staleness": int(staleness),
+                               "weight": float(w)})
+                if self.wireless:
+                    tr_.link_span("sbs_ul", t0=t_s0, dur=sync_tail,
+                                  bits=s_ul, name="sync_ul",
+                                  track=f"cluster{n}")
+                    tr_.link_span("mbs_dl", t0=t_s0, dur=sync_tail,
+                                  bits=s_dl, name="sync_dl",
+                                  track=f"cluster{n}")
             if self._record:
                 # the ACTIVE cluster's loss: the vmapped fallback computes
                 # all N rows but only row n was merged (the masked step
@@ -1144,5 +1345,8 @@ class SimEngine:
             if ev.round + 1 < rounds:
                 q.push(t + self._cluster_round_time(n, comp),
                        Event("cluster_done", cluster=n, round=ev.round + 1))
+            round_t0[n] = t
+            self.obs.tick()
+        self._finish_run()
         trace.meta.update(self._totals())
         return state, trace

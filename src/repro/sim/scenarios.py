@@ -228,13 +228,15 @@ def build_engine(
     seed: Optional[int] = None,
     trace_file: Optional[str] = None,
     residency: Optional[str] = None,
+    obs=None,
     engine_cls: type = SimEngine,
 ) -> SimEngine:
     """Topology + fleet (+ mobility trace + residency tracker) + engine
-    for a training scenario. ``trace_file``/``residency`` override the
-    scenario's ``SimConfig`` (the ``--trace-in``/``--residency`` CLI
-    hooks); ``engine_cls`` swaps the engine implementation (the
-    equivalence tests build ``sim.legacy.LegacySimEngine`` here).
+    for a training scenario. ``trace_file``/``residency``/``obs`` override
+    the scenario's ``SimConfig`` (the ``--trace-in``/``--residency``/
+    ``--trace-viz`` CLI hooks); ``engine_cls`` swaps the engine
+    implementation (the equivalence tests build ``sim.legacy.
+    LegacySimEngine`` here).
     """
     assert scn.kind == "train", f"{scn.name} is a sampling scenario"
     sim = scn.sim
@@ -246,6 +248,8 @@ def build_engine(
         over["trace_model"] = None
     if residency is not None:
         over["residency"] = residency
+    if obs is not None:
+        over["obs"] = obs
     if over:
         sim = dataclasses.replace(sim, **over)
     if (sim.trace_file or sim.trace_model) and sim.speed_mps > 0:

@@ -16,9 +16,27 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.obs.metrics import current_registry
 from repro.wireless.broadcast import broadcast_latency
 from repro.wireless.subcarrier import allocate_subcarriers
 from repro.wireless.topology import HCNTopology
+
+
+def _emit_pricing(fn: str, fh_rate, theta_u, theta_d, gamma_dl) -> None:
+    """Mirror one radio (re)pricing into the ambient metrics registry.
+
+    The pricing functions have no handle to thread, so they emit into
+    ``current_registry()`` — the shared ``NULL_REGISTRY`` unless a
+    telemetry run installed a live one (one branch when disabled).
+    """
+    reg = current_registry()
+    if not reg.enabled:
+        return
+    reg.counter("wireless.pricings").inc(fn=fn)
+    reg.gauge("wireless.fh_rate_bps").set(fh_rate)
+    reg.gauge("wireless.theta_u_s").set(theta_u)
+    reg.gauge("wireless.theta_d_s").set(theta_d)
+    reg.histogram("wireless.gamma_dl_s").observe(gamma_dl)
 
 
 @dataclass
@@ -137,6 +155,7 @@ def hfl_latency(
     # Monte-Carlo (broadcast time is ~linear in bits at these payloads)
     with np.errstate(divide="ignore", invalid="ignore"):
         dl_rates = np.where(gamma_dl > 0, bits_sbs_dl / gamma_dl, np.inf)
+    _emit_pricing("hfl_latency", fh_rate, theta_u, theta_d, gamma_dl)
     return per_iter, {
         "gamma_ul": gamma_ul, "gamma_dl": gamma_dl,
         "theta_u": theta_u, "theta_d": theta_d,
@@ -269,6 +288,7 @@ def hfl_latency_single(
     per_iter = gamma_period / H
     with np.errstate(divide="ignore", invalid="ignore"):
         dl_rates = np.where(gamma_dl > 0, bits_sbs_dl / gamma_dl, np.inf)
+    _emit_pricing("hfl_latency_single", fh_rate, theta_u, theta_d, gamma_dl)
     return per_iter, {
         "gamma_ul": gamma_ul, "gamma_dl": gamma_dl,
         "theta_u": theta_u, "theta_d": theta_d,

@@ -1,0 +1,241 @@
+#!/usr/bin/env python3
+"""Summarize / validate a Chrome trace exported by ``--trace-viz``.
+
+Stdlib-only on purpose: point it at a trace JSON from any run on any
+machine, no repro install needed.
+
+  python tools/trace_summary.py trace.json           # human summary
+  python tools/trace_summary.py trace.json --check   # CI validation
+
+Summary mode reports the virtual wallclock, per-track busy time, per-span
+totals, the per-link payload breakdown (bits and busy time), and a
+critical-path attribution: for each engine-track step, which cluster's
+compute/UL/DL chain was the longest pole.
+
+``--check`` exits nonzero unless (a) the file is schema-valid Chrome
+trace-event JSON (same rules as ``repro.obs.spans.validate_trace``,
+re-implemented here so the tool stays dependency-free), and (b) the books
+balance: per-link span bits summed from the events equal the tracer's
+``metadata.link_bits`` ledger (when no events were dropped), and — for
+measured-accounting runs — equal the engine ``PayloadLedger`` totals in
+``metadata.engine_meta`` bit for bit.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+VIRTUAL_PID = 1
+HOST_PID = 2
+_REQUIRED_KEYS = ("name", "ph", "pid", "tid", "ts")
+# cluster-phase span names attributed by the critical-path pass
+_PHASES = ("comp", "ul", "dl")
+
+
+def validate(obj) -> list:
+    """Schema errors (empty list == valid). Mirrors
+    ``repro.obs.spans.validate_trace`` without importing it."""
+    errs = []
+    if not isinstance(obj, dict) or "traceEvents" not in obj:
+        return ["not a trace-event object: missing 'traceEvents'"]
+    events = obj["traceEvents"]
+    if not isinstance(events, list):
+        return ["'traceEvents' must be a list"]
+    last_ts = {}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errs.append(f"event {i} is not an object")
+            continue
+        ph = ev.get("ph")
+        if ph == "M":
+            continue
+        missing = [k for k in _REQUIRED_KEYS if k not in ev]
+        if missing:
+            errs.append(f"event {i} missing keys {missing}")
+            continue
+        if ph not in ("X", "i", "B", "E", "C"):
+            errs.append(f"event {i} has unknown phase {ph!r}")
+        ts = ev["ts"]
+        if not isinstance(ts, (int, float)) or ts < 0:
+            errs.append(f"event {i} has bad ts {ts!r}")
+            continue
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < -1e-9:
+                errs.append(f"event {i} has bad dur {dur!r}")
+        if ev["pid"] == VIRTUAL_PID:
+            key = (ev["pid"], ev["tid"])
+            if ts + 1e-6 < last_ts.get(key, 0.0):
+                errs.append(f"event {i} ts went backwards on track {key}: "
+                            f"{ts} < {last_ts[key]}")
+            last_ts[key] = ts
+    return errs
+
+
+def check_conservation(obj) -> list:
+    """Bit-conservation errors (empty list == books balance)."""
+    errs = []
+    meta = obj.get("metadata", {})
+    ledger = meta.get("link_bits", {})
+    dropped = meta.get("dropped_events", 0)
+    # 1) events vs the tracer's own running per-link sums — exact float
+    #    equality is required and achievable: json round-trips doubles, and
+    #    summation order here matches emit order
+    if dropped == 0:
+        seen = defaultdict(float)
+        for ev in obj["traceEvents"]:
+            if ev.get("ph") == "X" and ev.get("cat") == "comm":
+                a = ev.get("args", {})
+                if "link" in a:
+                    seen[a["link"]] += a["bits"]
+        for link, total in sorted(ledger.items()):
+            if seen.get(link, 0.0) != total:
+                errs.append(f"link {link!r}: span bits {seen.get(link, 0.0)!r}"
+                            f" != metadata.link_bits {total!r}")
+        for link in sorted(set(seen) - set(ledger)):
+            errs.append(f"link {link!r} has span bits but no ledger entry")
+    # 2) tracer sums vs the engine PayloadLedger (measured accounting only:
+    #    analytic runs price transfers without a byte-accurate ledger)
+    em = meta.get("engine_meta", {})
+    if em.get("payload_accounting") == "measured":
+        for link, total in sorted(ledger.items()):
+            want = em.get(f"bits_{link}")
+            if want is not None and want != total:
+                errs.append(f"link {link!r}: tracer {total!r} != "
+                            f"PayloadLedger {want!r}")
+    return errs
+
+
+def _tracks(obj) -> dict:
+    names = {}
+    for ev in obj["traceEvents"]:
+        if ev.get("ph") == "M" and ev.get("name") == "thread_name":
+            names[(ev["pid"], ev["tid"])] = ev["args"]["name"]
+    return names
+
+
+def summarize(obj, top: int = 12) -> str:
+    tracks = _tracks(obj)
+    spans = [e for e in obj["traceEvents"] if e.get("ph") == "X"]
+    virt = [e for e in spans if e["pid"] == VIRTUAL_PID]
+    host = [e for e in spans if e["pid"] == HOST_PID]
+    lines = []
+    meta = obj.get("metadata", {})
+
+    if virt:
+        t0 = min(e["ts"] for e in virt)
+        t1 = max(e["ts"] + e["dur"] for e in virt)
+        lines.append(f"virtual wallclock   {(t1 - t0) / 1e6:.3f} s "
+                     f"({len(virt)} spans)")
+    if host:
+        h1 = max(e["ts"] + e["dur"] for e in host)
+        lines.append(f"host span extent    {h1 / 1e6:.3f} s "
+                     f"({len(host)} spans)")
+    if meta.get("dropped_events"):
+        lines.append(f"dropped events      {meta['dropped_events']} "
+                     "(raise ObsConfig.max_trace_events)")
+
+    busy = defaultdict(float)
+    for e in virt:
+        busy[tracks.get((e["pid"], e["tid"]), f"tid{e['tid']}")] += e["dur"]
+    lines.append("\nper-track busy time (virtual):")
+    for tr, us in sorted(busy.items(), key=lambda kv: -kv[1])[:top]:
+        lines.append(f"  {tr:<16} {us / 1e6:10.3f} s")
+
+    by_name = defaultdict(lambda: [0, 0.0])
+    for e in virt:
+        c = by_name[e["name"]]
+        c[0] += 1
+        c[1] += e["dur"]
+    lines.append("\nper-span totals (virtual):")
+    for name, (n, us) in sorted(by_name.items(), key=lambda kv: -kv[1][1]):
+        lines.append(f"  {name:<14} x{n:<6} {us / 1e6:10.3f} s")
+
+    link_bits = defaultdict(float)
+    link_time = defaultdict(float)
+    for e in virt:
+        a = e.get("args", {})
+        if e.get("cat") == "comm" and "link" in a:
+            link_bits[a["link"]] += a["bits"]
+            link_time[a["link"]] += e["dur"]
+    if link_bits:
+        lines.append("\nper-link payloads:")
+        for link in sorted(link_bits):
+            lines.append(f"  {link:<8} {link_bits[link] / 8e6:10.3f} MB  "
+                         f"busy {link_time[link] / 1e6:8.3f} s")
+
+    # critical path: inside each engine-track step span, find the cluster
+    # track whose phase spans sum longest — that cluster was the pole
+    engine = sorted((e for e in virt
+                     if tracks.get((e["pid"], e["tid"])) == "engine"),
+                    key=lambda e: e["ts"])
+    clusters = defaultdict(list)
+    for e in virt:
+        tr = tracks.get((e["pid"], e["tid"]), "")
+        if tr.startswith("cluster") and e["name"] in _PHASES:
+            clusters[tr].append(e)
+    if engine and clusters:
+        crit_count = defaultdict(int)
+        crit_phase = defaultdict(float)
+        for step in engine:
+            s0, s1 = step["ts"], step["ts"] + step["dur"]
+            best, best_us, best_spans = None, -1.0, ()
+            for tr, evs in clusters.items():
+                inside = [e for e in evs if s0 - 1e-3 <= e["ts"] < s1]
+                us = sum(e["dur"] for e in inside)
+                if us > best_us:
+                    best, best_us, best_spans = tr, us, inside
+            if best is not None and best_us > 0:
+                crit_count[best] += 1
+                for e in best_spans:
+                    crit_phase[e["name"]] += e["dur"]
+        if crit_count:
+            lines.append("\ncritical path (longest cluster per engine step):")
+            for tr, n in sorted(crit_count.items(), key=lambda kv: -kv[1]):
+                lines.append(f"  {tr:<12} critical in {n} step(s)")
+            tot = sum(crit_phase.values())
+            if tot > 0:
+                shares = "  ".join(f"{p}={crit_phase[p] / tot:5.1%}"
+                                   for p in _PHASES if p in crit_phase)
+                lines.append(f"  phase split on the critical path: {shares}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON from --trace-viz")
+    ap.add_argument("--check", action="store_true",
+                    help="validate schema + bit conservation; exit nonzero "
+                         "on any failure, print nothing on success")
+    ap.add_argument("--top", type=int, default=12,
+                    help="rows per table in summary mode")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.trace) as f:
+            obj = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"trace_summary: cannot load {args.trace}: {e}",
+              file=sys.stderr)
+        return 2
+
+    errs = validate(obj)
+    if args.check:
+        errs += check_conservation(obj)
+        for e in errs:
+            print(f"trace_summary: FAIL: {e}", file=sys.stderr)
+        if not errs:
+            n = sum(1 for e in obj["traceEvents"] if e.get("ph") != "M")
+            print(f"trace_summary: OK ({n} events, conservation holds)")
+        return 1 if errs else 0
+
+    for e in errs:
+        print(f"trace_summary: warning: {e}", file=sys.stderr)
+    print(summarize(obj, top=args.top))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
