@@ -12,8 +12,10 @@ Gated metrics are the deterministic smaller-is-better ones: virtual
 wall-clock / latency seconds, measured bits per param, total bits on a
 link class, and the masked-step FLOP ratio — plus a short list of
 larger-is-better same-run ratios (``pricing_speedup_100k``), where a DROP
-beyond tolerance fails. Raw host-dependent numbers (encode throughput,
-events/s) are never gated.
+beyond tolerance fails, and absolute-floor gates (``tracing_on_over_off``
+>= 0.9: tracing may not cost more than 10% of engine throughput; checked
+against the fresh artifact only, so blessing cannot ratchet it down).
+Raw host-dependent numbers (encode throughput, events/s) are never gated.
 
 A gated baseline key MISSING from the fresh artifact also fails — silently
 dropping a metric is how perf surfaces rot. After an intentional change
@@ -76,6 +78,35 @@ GATED_PARENT_RES = (
 GATED_LARGER_KEY_RES = (
     r"^pricing_speedup_100k$",
 )
+
+# ABSOLUTE-floor gates, checked against the FRESH artifact only: same-run
+# ratios where the budget is a contract, not a baseline (a baseline-
+# relative gate would let the metric ratchet down 25% per bless). The
+# tracing on/off events-per-second ratio must keep >= 90% of untraced
+# engine throughput. A floor key present in the baseline but absent from
+# the fresh artifact fails as missing, like every other gated metric.
+GATED_FLOOR_RES = (
+    (r"^tracing_on_over_off$", 0.9),
+)
+
+
+def _matches_floor(path: str):
+    key = path.rsplit("/", 1)[-1]
+    for pat, floor in GATED_FLOOR_RES:
+        if re.match(pat, key):
+            return floor
+    return None
+
+
+def check_floors(base: dict, fresh: dict):
+    """-> (violations [(path, value, floor)], missing [path]) over the
+    absolute-floor gates; ``missing`` lists baseline floor keys that the
+    fresh artifact dropped."""
+    violations = [(p, v, _matches_floor(p)) for p, v in sorted(fresh.items())
+                  if _matches_floor(p) is not None and v < _matches_floor(p)]
+    missing = [p for p in sorted(base)
+               if _matches_floor(p) is not None and p not in fresh]
+    return violations, missing
 
 
 def _direction(path: str):
@@ -188,12 +219,19 @@ def main(argv=None) -> int:
             fresh = collect(json.load(f))
         regs, missing, unblessed, improved = compare(base, fresh,
                                                      args.tolerance)
-        n_gated = sum(1 for p in base if _is_gated(p))
-        bad = bool(regs or missing or unblessed)
+        floors, floor_missing = check_floors(base, fresh)
+        missing = missing + floor_missing
+        n_gated = sum(1 for p in base
+                      if _is_gated(p) or _matches_floor(p) is not None)
+        bad = bool(regs or missing or unblessed or floors)
         print(f"{name}: {'FAIL' if bad else 'ok'} — {n_gated} gated metrics, "
-              f"{len(regs)} regressed, {len(missing)} missing, "
-              f"{len(unblessed)} unblessed, "
+              f"{len(regs)} regressed, {len(floors)} below floor, "
+              f"{len(missing)} missing, {len(unblessed)} unblessed, "
               f"{len(improved)} improved beyond tolerance")
+        for path, v, fl in floors:
+            print(f"  FLOOR      {path}: {v:.4g} below the absolute {fl:g} "
+                  f"floor (same-run ratio — host speed cancels; fix the "
+                  f"instrumentation cost, do not re-bless)")
         for path, b, f_, rel in regs:
             print(f"  REGRESSION {path}: {b:.6g} -> {f_:.6g} (+{rel:.0%}, "
                   f"tolerance {args.tolerance:.0%})")

@@ -96,14 +96,16 @@ def run(periods: int = 2, seed: int = 0):
 
 
 def run_tracing_overhead(periods: int = 2, seed: int = 0):
-    """Telemetry-overhead guard: the diurnal smoke with tracing fully on
+    """Telemetry-overhead gate: the diurnal smoke with tracing fully on
     (spans + metrics registry + host spans) vs off, sharing one pair of
     warm jitted steps so only the instrumentation differs. The two runs
     are bit-identical on the virtual clock (tested in test_obs.py); this
-    leg watches the HOST cost. All keys are host-dependent and therefore
-    informational in ``BENCH_sim.json`` (names deliberately outside
-    ``check_regression.GATED_KEY_RES``); the 0.9x floor prints a warning
-    rather than failing, mirroring the events/s convention of scale-1m."""
+    leg watches the HOST cost. The raw events/s keys stay host-dependent
+    and informational, but ``tracing_on_over_off`` is a same-run ratio —
+    host speed cancels — and is GATED by ``check_regression`` against an
+    absolute 0.9 floor (``GATED_FLOOR_RES``): instrumentation may not
+    cost more than 10% of engine throughput. The warning below fires at
+    the same threshold so a local run shows the breach immediately."""
     import sys
 
     from repro.obs import ObsConfig

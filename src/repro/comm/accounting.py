@@ -190,17 +190,33 @@ def make_sync_probe(hfl_cfg, codec: "str | Codec"):
 # ---------------------------------------------------------------------------
 
 
+_index_bits_warned = False
+
+
+def _reset_index_bits_warning() -> None:
+    """Test hook: re-arm the once-per-process deprecation warning."""
+    global _index_bits_warned
+    _index_bits_warned = False
+
+
 def warn_index_bits_deprecated(lp) -> None:
     """``LatencyParams.index_bits`` was the hand-waved stand-in for index
-    overhead; the measured path counts the real index streams. Keep the
-    ``=0`` default for paper-figure reproduction; combining a nonzero value
-    with measured accounting double-charges indices."""
-    if getattr(lp, "index_bits", 0.0):
-        warnings.warn(
-            "LatencyParams.index_bits is deprecated under "
-            "payload_accounting='measured': codecs already count the real "
-            "index streams, so a nonzero index_bits double-charges them. "
-            "Keep index_bits=0 (the paper's accounting).",
-            DeprecationWarning,
-            stacklevel=3,
-        )
+    overhead. It is deprecated under BOTH accounting modes: the measured
+    path counts the real codec index streams (a nonzero value
+    double-charges them), and the analytic path should reproduce the
+    paper's Q·(1-φ)·bits_per_param with no index surcharge. Keep the
+    ``=0`` default. Warns exactly once per process — a fleet scenario
+    builds engines in a loop and must not spam the log."""
+    global _index_bits_warned
+    if _index_bits_warned or not getattr(lp, "index_bits", 0.0):
+        return
+    _index_bits_warned = True
+    warnings.warn(
+        "LatencyParams.index_bits is deprecated: measured accounting "
+        "already counts the real codec index streams (a nonzero value "
+        "double-charges them), and analytic accounting should match the "
+        "paper's Q*(1-phi)*bits_per_param. Keep index_bits=0 (the "
+        "paper's accounting). This warning fires once per process.",
+        DeprecationWarning,
+        stacklevel=3,
+    )

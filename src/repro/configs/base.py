@@ -284,6 +284,11 @@ class SimConfig:
     # re-price at every event (legacy); > 0 batches fleet movement and
     # re-pricing to at most once per interval (fleet-scale runs)
     reprice_interval_s: float = 0.0
+    # fault injection for the health monitor: a cluster index whose MUs
+    # are forced unavailable every round (masked AFTER the availability
+    # RNG draw, so all other clusters' trajectories are untouched); None
+    # = no fault. Drives the dead/starved-cluster anomaly rule.
+    fault_dead_cluster: Optional[int] = None
     # observability (repro.obs): None keeps telemetry fully off — the
     # engine's emit sites collapse to one attribute check and runs stay
     # bit-identical to the uninstrumented engine either way

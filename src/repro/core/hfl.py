@@ -189,7 +189,38 @@ def _wire_round_rows(x, fmt: str):
 # ---- flat layout: the paper's whole-model Ω, one launch per hop -----------
 
 
-def _make_flat_local_sync(hfl_cfg, wire):
+def _flat_sync_stats(wn, new_eps, new_e, new_wref, d, ul_idx, dl_idx):
+    """In-jit learning-health statistics (``collect_stats=True``).
+
+    Every input is an intermediate the sync already has live in HBM —
+    the stats are a handful of extra norm reductions plus the Ω index
+    arrays passed through as outputs, so collecting them costs no extra
+    HBM round-trips and never touches the main dataflow (the sync's
+    state outputs are bit-identical with stats on or off; tested).
+
+      * ``drift``      [N]  — per-cluster consensus drift
+                              ||w_n − w̄|| / ||w̄|| over PRE-sync models
+      * ``eps_norm``   [N]  — post-sync SBS error-feedback residual norms
+      * ``e_norm``     []   — post-sync MBS residual norm
+      * ``wref_norm``  []   — new reference-model norm (ratio denominators)
+      * ``update_norm`` []  — ||d||, the applied consensus update
+      * ``ul_idx`` [N, k_ul] / ``dl_idx`` [k_dl] — Ω index sets; the
+        host-side monitor diffs consecutive syncs for overlap fractions
+    """
+    wbar = jnp.mean(wn, axis=0)
+    wnorm = jnp.maximum(jnp.linalg.norm(wbar), 1e-30)
+    return {
+        "drift": jnp.linalg.norm(wn - wbar[None, :], axis=1) / wnorm,
+        "eps_norm": jnp.linalg.norm(new_eps, axis=1),
+        "e_norm": jnp.linalg.norm(new_e),
+        "wref_norm": jnp.linalg.norm(new_wref),
+        "update_norm": jnp.linalg.norm(d),
+        "ul_idx": ul_idx,
+        "dl_idx": dl_idx,
+    }
+
+
+def _make_flat_local_sync(hfl_cfg, wire, collect_stats: bool = False):
     """Single-process whole-vector sync (mesh=None): the cluster axis is a
     leading array axis and the cross-pod exchange is a local mean."""
     impl = hfl_cfg.omega_impl
@@ -205,7 +236,7 @@ def _make_flat_local_sync(hfl_cfg, wire):
         # --- SBS side: drift + discounted error, whole-vector top-k uplink
         #     (Alg.5 l.24-27, Ω over V ∈ R^Q) ---
         s = wn - wref[None, :] + hfl_cfg.beta_s * eps  # [N, Q]
-        sents, new_eps = [], []
+        sents, new_eps, ul_idx = [], [], []
         for n in range(N):  # static unroll; N is small
             vals, idx = sp.pack_phi(s[n], hfl_cfg.phi_sbs_ul, impl=impl)
             if wire:
@@ -213,6 +244,7 @@ def _make_flat_local_sync(hfl_cfg, wire):
             sent = sp.unpack_topk(vals, idx, Q)
             sents.append(sent)
             new_eps.append(s[n] - sent)
+            ul_idx.append(idx)
 
         # --- MBS side: consensus + discounted error + top-k downlink ---
         delta = sum(sents) / N + hfl_cfg.beta_m * e
@@ -225,12 +257,17 @@ def _make_flat_local_sync(hfl_cfg, wire):
 
         # --- clusters adopt the new reference (Alg.5 l.33/43) ---
         new_wn = jnp.broadcast_to(new_wref[None], (N, Q))
-        return state._replace(
+        eps_stacked = jnp.stack(new_eps)
+        new_state = state._replace(
             params=fl.unpack_stacked(new_wn, p_spec),
             w_ref=fl.unpack(new_wref, ref_spec),
-            eps=fl.unpack_stacked(jnp.stack(new_eps), eps_spec),
+            eps=fl.unpack_stacked(eps_stacked, eps_spec),
             e=fl.unpack(new_e, ref_spec),
         )
+        if not collect_stats:
+            return new_state
+        return new_state, _flat_sync_stats(
+            wn, eps_stacked, new_e, new_wref, d, jnp.stack(ul_idx), didx)
 
     return flat_sync
 
@@ -374,7 +411,7 @@ def _scatter_rows(idx, vals, L: int):
     )
 
 
-def _make_flat_fused_local_sync(hfl_cfg, wire):
+def _make_flat_fused_local_sync(hfl_cfg, wire, collect_stats: bool = False):
     """Single-process whole-vector sync via the fused select kernel.
 
     Protocol-identical to ``_make_flat_local_sync`` (selection is
@@ -419,12 +456,21 @@ def _make_flat_fused_local_sync(hfl_cfg, wire):
 
         # --- clusters adopt the new reference (Alg.5 l.33/43) ---
         params, w_ref = _unpack_ref_outputs(new_wref, ref_spec, state)
-        return state._replace(
+        new_state = state._replace(
             params=params,
             w_ref=w_ref,
             eps=fl.unpack_stacked(new_eps, eps_spec),
             e=fl.unpack(new_e, ref_spec),
         )
+        if not collect_stats:
+            return new_state
+        # the fused prologue never materializes the stacked params matrix
+        # (that is its point), so the drift statistic packs it here — an
+        # extra read of buffers already resident, paid only when health
+        # monitoring is on
+        wn, _ = fl.pack_stacked(state.params)
+        return new_state, _flat_sync_stats(
+            wn, new_eps, new_e, new_wref, d, idx, didx)
 
     return flat_sync
 
@@ -746,11 +792,19 @@ def jit_sync_step(sync_step):
     model-sized error/reference buffers on top of params+opt). Callers must
     rebind: ``state = sync(state)``; touching the old state afterwards
     raises on deleted buffers.
+
+    A sync built with ``collect_stats=True`` returns ``(state, stats)``;
+    the flag is propagated onto the jitted callable so callers handed a
+    pre-built step (the engine) can detect the return shape with
+    ``getattr(sync, "collect_stats", False)``.
     """
-    return jax.jit(sync_step, donate_argnums=0)
+    jitted = jax.jit(sync_step, donate_argnums=0)
+    jitted.collect_stats = bool(getattr(sync_step, "collect_stats", False))
+    return jitted
 
 
-def make_sync_step(hfl_cfg, mesh=None, param_specs=None, *, layout=None):
+def make_sync_step(hfl_cfg, mesh=None, param_specs=None, *, layout=None,
+                   collect_stats: bool = False):
     """Build the every-H consensus step.
 
     ``param_specs``: pytree of PartitionSpec (without the leading cluster
@@ -776,6 +830,12 @@ def make_sync_step(hfl_cfg, mesh=None, param_specs=None, *, layout=None):
         materialization per device.
       * other impls keep their historical paths (local whole-vector, or
         the per-device "pod" shard_map on pod meshes).
+
+    ``collect_stats=True`` makes the returned sync also return an in-jit
+    learning-health statistics dict (``_flat_sync_stats``; the sync
+    becomes ``state -> (state, stats)``). Supported on the local dense,
+    flat-topk and flat-fused paths — the ones the simulator drives;
+    sharded/mesh/leaf layouts raise.
     """
     mode = hfl_cfg.sync_mode
     _count_build(
@@ -783,6 +843,7 @@ def make_sync_step(hfl_cfg, mesh=None, param_specs=None, *, layout=None):
         layout=(layout or getattr(hfl_cfg, "sync_layout", "flat")),
         impl=hfl_cfg.omega_impl)
     if mode == "dense":
+        N = hfl_cfg.num_clusters
 
         def dense_sync(state: HFLState):
             w_mean = jax.tree.map(lambda p: jnp.mean(p.astype(jnp.float32), axis=0), state.params)
@@ -797,8 +858,27 @@ def make_sync_step(hfl_cfg, mesh=None, param_specs=None, *, layout=None):
             new_wref = jax.tree.map(
                 lambda m, r: m.astype(r.dtype), w_mean, state.w_ref
             )
-            return state._replace(params=new_params, w_ref=new_wref)
+            new_state = state._replace(params=new_params, w_ref=new_wref)
+            if not collect_stats:
+                return new_state
+            # dense averaging has no Ω or error feedback: drift and the
+            # applied update are the meaningful signals, the residual
+            # norms are identically zero (no index keys — the monitor
+            # skips overlap when they are absent)
+            wn, _ = fl.pack_stacked(state.params)
+            wref_old, _ = fl.pack(state.w_ref)
+            wbar = jnp.mean(wn, axis=0)
+            wnorm = jnp.maximum(jnp.linalg.norm(wbar), 1e-30)
+            stats = {
+                "drift": jnp.linalg.norm(wn - wbar[None, :], axis=1) / wnorm,
+                "eps_norm": jnp.zeros((N,), jnp.float32),
+                "e_norm": jnp.zeros((), jnp.float32),
+                "wref_norm": jnp.linalg.norm(wbar),
+                "update_norm": jnp.linalg.norm(wbar - wref_old),
+            }
+            return new_state, stats
 
+        dense_sync.collect_stats = collect_stats
         return dense_sync
 
     wire = wire_format_of(hfl_cfg)
@@ -809,6 +889,12 @@ def make_sync_step(hfl_cfg, mesh=None, param_specs=None, *, layout=None):
         raise ValueError(layout)
 
     has_pod = mesh is not None and "pod" in mesh.axis_names
+
+    def _no_stats(path: str):
+        if collect_stats:
+            raise ValueError(
+                f"collect_stats is not supported on the {path} sync path "
+                f"(local flat topk/fused and dense only)")
 
     if not has_pod:
         # Single-pod / CPU path: emulate the cluster axis locally. The
@@ -822,6 +908,7 @@ def make_sync_step(hfl_cfg, mesh=None, param_specs=None, *, layout=None):
                     if a in mesh.axis_names
                 ]))
                 if span > 1:
+                    _no_stats("mesh-sharded flat")
                     return _make_flat_sharded_sync(hfl_cfg, wire, mesh)
             if flat_shards > 1:
                 if not fused:
@@ -829,14 +916,21 @@ def make_sync_step(hfl_cfg, mesh=None, param_specs=None, *, layout=None):
                         "flat_shards > 1 requires omega_impl='fused' (the "
                         "sharded flat sync is built on the fused per-shard "
                         "compaction)")
+                _no_stats("sharded flat")
                 return _make_flat_sharded_local_sync(hfl_cfg, wire,
                                                      flat_shards)
             if fused:
-                return _make_flat_fused_local_sync(hfl_cfg, wire)
-            return _make_flat_local_sync(hfl_cfg, wire)
+                sync = _make_flat_fused_local_sync(hfl_cfg, wire,
+                                                   collect_stats)
+            else:
+                sync = _make_flat_local_sync(hfl_cfg, wire, collect_stats)
+            sync.collect_stats = collect_stats
+            return sync
+        _no_stats("leaf")
         return _make_leaf_local_sync(hfl_cfg, wire)
 
     # --- multi-pod: fully-manual shard_map, per-shard top-k, pod all-gather ---
+    _no_stats("pod shard_map")
     assert param_specs is not None, "sparse sync on a pod mesh needs param_specs"
     P = jax.sharding.PartitionSpec
 

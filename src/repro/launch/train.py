@@ -22,9 +22,12 @@ Chrome/Perfetto trace of every simulator event on the virtual clock plus
 host-clock jit-boundary spans; ``--metrics-out run.jsonl`` streams every
 console line as a structured JSONL event and appends the final metrics-
 registry snapshot; ``--obs-hlo-cost`` adds compile-time HLO flop/byte/launch
-analysis of the jitted steps. Reporting also splits first-step trace+compile
-time from the steady-state s/step (the historical figure silently folded the
-compile stall into every step).
+analysis of the jitted steps; ``--obs-health`` turns on the learning-health
+monitor (per-cluster drift/residual/Ω-overlap from the jitted sync,
+staleness + participation fairness from the simulator, streaming anomaly
+rules -> JSONL ``health`` events + Perfetto counter tracks). Reporting also
+splits first-step trace+compile time from the steady-state s/step (the
+historical figure silently folded the compile stall into every step).
 """
 from __future__ import annotations
 
@@ -148,15 +151,25 @@ def main(argv=None):
                     help="analyze the jitted train/sync steps' HLO "
                          "(flops, HBM bytes, collective bytes, launch "
                          "count) at startup; costs one extra compile")
+    ap.add_argument("--obs-health", action="store_true",
+                    help="learning-health monitor: per-cluster consensus "
+                         "drift / residual norms / Ω overlap from the "
+                         "jitted sync, staleness + participation fairness "
+                         "from the simulator, streaming anomaly rules "
+                         "(divergence blowup, dead cluster, loss spike, "
+                         "...). Emits health.* gauges, health JSONL "
+                         "events, and Perfetto counter tracks; the run "
+                         "itself stays bit-identical")
     args = ap.parse_args(argv)
 
     obs_cfg = None
     if (args.trace_viz or args.metrics_out or args.obs_heartbeat
-            or args.obs_hlo_cost):
+            or args.obs_hlo_cost or args.obs_health):
         obs_cfg = ObsConfig(
             trace_path=args.trace_viz, metrics_path=args.metrics_out,
             heartbeat_events=args.obs_heartbeat,
-            hlo_cost=bool(args.obs_hlo_cost))
+            hlo_cost=bool(args.obs_hlo_cost),
+            health=bool(args.obs_health))
     log = RunLogger(args.metrics_out)
 
     scenario = None
@@ -216,6 +229,9 @@ def main(argv=None):
         tele = engine.obs
     else:
         tele = make_telemetry(obs_cfg)
+    if tele.health.enabled:
+        # anomalies stream to the JSONL runlog as structured health events
+        tele.health.runlog = log
 
     params = init_model(jax.random.PRNGKey(0), cfg)
     opt = SGDM(momentum=0.9, weight_decay=1e-4)
@@ -227,7 +243,13 @@ def main(argv=None):
     loss_fn = make_loss_fn(cfg)
     train_step = jax.jit(make_cluster_train_step(loss_fn, opt, sched))
     # sync consumes-and-replaces the whole state: donate it (peak-mem lever)
-    sync_step = jit_sync_step(make_sync_step(hfl, mesh=None))
+    # with --obs-health on a scenario run the sync also returns its in-jit
+    # health statistics (supported on the local flat/fused/dense paths;
+    # sharded layouts raise in make_sync_step, so gate on the flags)
+    collect = bool(args.obs_health and scenario is not None
+                   and args.sync_layout == "flat" and args.flat_shards == 1)
+    sync_step = jit_sync_step(
+        make_sync_step(hfl, mesh=None, collect_stats=collect))
 
     lm = SyntheticLM(cfg.vocab_size, seed=1)
     rng = np.random.default_rng(2)
@@ -354,9 +376,26 @@ def main(argv=None):
     if args.ckpt_dir:
         path = save_checkpoint(args.ckpt_dir, args.steps, state._asdict())
         log.log("checkpoint", f"[train] checkpoint -> {path}", path=str(path))
+    if tele.health.enabled:
+        hs = tele.health.summary()
+        log.log("health_summary",
+                f"[health] anomalies={hs['anomalies']} "
+                f"by_rule={hs['by_rule'] or '{}'} "
+                f"signals={len(hs['signals'])}",
+                **hs)
     if tele.enabled:
-        # final registry snapshot: JSONL-only (it is large and structured)
-        log.log("metrics", None, metrics=tele.registry.snapshot())
+        snap = tele.registry.snapshot()
+        # histogram quantiles on the console (the full snapshot is
+        # JSONL-only below — it is large and structured)
+        for name, m in sorted(snap.items()):
+            if m.get("kind") != "histogram":
+                continue
+            for lbl, s in m["series"].items():
+                where = f"{{{lbl}}}" if lbl else ""
+                print(f"[obs] {name}{where}: n={s['count']} "
+                      f"p50={s['p50']:.4g} p95={s['p95']:.4g} "
+                      f"p99={s['p99']:.4g} max={s['max']:.4g}")
+        log.log("metrics", None, metrics=snap)
     log.close()
     # one return shape for every mode; the wall-clock trace is exposed via
     # --trace-out (scenario runs) rather than a third tuple element

@@ -18,12 +18,19 @@ Public surface:
   * ``RunLogger`` — console + JSONL structured run log.
 """
 from repro.obs.config import ObsConfig
+from repro.obs.health import (
+    DEFAULT_RULES, NULL_HEALTH, HealthMonitor, NullHealthMonitor, Rule,
+    Window,
+)
 from repro.obs.jaxprof import StepClock, live_bytes, program_costs
 from repro.obs.metrics import (
     NULL_REGISTRY, MetricsRegistry, current_registry, set_registry,
     use_registry,
 )
-from repro.obs.runlog import RunLogger
+from repro.obs.runlog import (
+    EVENT_SCHEMAS, SCHEMA_VERSION, RunLogger, validate_event,
+    validate_runlog,
+)
 from repro.obs.spans import (
     HOST_PID, VIRTUAL_PID, SpanTracer, to_jsonable, validate_trace,
 )
@@ -36,5 +43,7 @@ __all__ = [
     "NULL_REGISTRY", "MetricsRegistry", "current_registry", "set_registry",
     "use_registry", "RunLogger", "HOST_PID", "VIRTUAL_PID", "SpanTracer",
     "to_jsonable", "validate_trace", "NULL_TELEMETRY", "NullTelemetry",
-    "Telemetry", "make_telemetry",
+    "Telemetry", "make_telemetry", "DEFAULT_RULES", "NULL_HEALTH",
+    "HealthMonitor", "NullHealthMonitor", "Rule", "Window",
+    "EVENT_SCHEMAS", "SCHEMA_VERSION", "validate_event", "validate_runlog",
 ]

@@ -44,3 +44,11 @@ class ObsConfig:
     # but not stored; per-link bit accumulation continues regardless, so
     # the conservation check stays exact.
     max_trace_events: int = 2_000_000
+    # learning-health monitoring (--obs-health): in-jit sync statistics
+    # (consensus drift, residual norms, Ω overlap), streaming anomaly
+    # rules, fleet participation-fairness. Stats are extra read-only
+    # outputs of the jitted sync step — replay stays bit-identical.
+    health: bool = False
+    # streaming-window length (observations) for the health aggregators;
+    # anomaly rules evaluate over this window
+    health_window: int = 64

@@ -1,0 +1,290 @@
+"""Learning-health monitor: streaming aggregation + anomaly detection.
+
+The monitor is the host-side half of the health tentpole. The jitted
+sync step (``core/hfl.py`` with ``collect_stats=True``) returns a small
+dict of scalars/index arrays that were already live in HBM — consensus
+drift per cluster, residual norms, the top-k index sets, update/weight
+norms. The monitor ingests those (plus fleet signals the engine computes
+array-level: participation, staleness, residency churn) and fans each
+observation out three ways:
+
+  * a ``health.*`` gauge in the metrics registry (last value, labelled
+    by cluster where applicable),
+  * a Chrome/Perfetto counter sample (``ph="C"``) on a ``health:*``
+    track of the ``--trace-viz`` export, plotted on the virtual
+    timeline,
+  * a streaming ``Window`` that the declarative rules evaluate; a breach
+    *entry* fires one structured anomaly: a ``health`` JSONL event (when
+    a RunLogger is attached), a trace instant, and a
+    ``health.anomalies`` counter increment.
+
+Ω overlap between consecutive syncs is computed here, host-side, from
+the returned index arrays (``np.intersect1d`` over at most
+num_clusters×k integers) — threading previous-index buffers through the
+donated sync step would cost HBM round-trips for a statistic that is
+cheap on the host.
+
+Everything is behind the PR-7 zero-overhead pattern: ``NULL_HEALTH``
+(one shared instance, ``enabled=False``) serves every run without
+``--obs-health``; the engine guards each ingest site with one attribute
+check. The monitor only *reads* values the run already produced — it
+never touches the RNG, the virtual clock, or model state — so replay
+stays bit-identical with monitoring on vs off (tested).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.obs.health.rules import DEFAULT_RULES, Window
+from repro.obs.metrics import NULL_REGISTRY
+
+
+class HealthMonitor:
+    """Live monitor: windows + rules + three-way emission."""
+
+    enabled = True
+
+    def __init__(self, window: int = 64, registry=None, tracer=None,
+                 rules=DEFAULT_RULES):
+        self.window = int(window)
+        self.registry = registry if registry is not None else NULL_REGISTRY
+        self.tracer = tracer
+        self.rules = tuple(rules)
+        # attached by launch/train.py when --metrics-out is also on
+        self.runlog = None
+        self.anomalies: list = []
+        self._windows: dict = {}      # (signal, label) -> Window
+        self._breached: set = set()   # (rule-name, label) latched breaches
+        self._prev_ul_idx: dict = {}  # scope-key -> np.ndarray of Ω indices
+        self._prev_dl_idx = None
+        self._idle = None             # per-cluster consecutive idle rounds
+        self._idle_by: dict = {}      # async variant: cluster -> consec idle
+
+    # --- lifecycle --------------------------------------------------------
+
+    def reset_run(self) -> None:
+        self._windows.clear()
+        self._breached.clear()
+        self._prev_ul_idx.clear()
+        self._prev_dl_idx = None
+        self._idle = None
+        self._idle_by.clear()
+        self.anomalies = []
+
+    # --- core observation path --------------------------------------------
+
+    def observe(self, signal: str, value, *, t: float, label: str = "") -> None:
+        """One observation: gauge + window + rule evaluation. ``t`` is
+        virtual seconds (the anomaly timestamp and counter-track x-axis)."""
+        v = float(value)
+        if not math.isfinite(v):
+            # NaN/inf IS the anomaly — a diverged signal must not be
+            # silently dropped from the windows
+            self._fire("non-finite", signal, label, "last", v, None, t)
+            return
+        labels = {"cluster": label} if label else {}
+        self.registry.gauge(f"health.{signal}").set(v, **labels)
+        key = (signal, label)
+        w = self._windows.get(key)
+        if w is None:
+            w = self._windows[key] = Window(self.window)
+        w.push(v)
+        for rule in self.rules:
+            if rule.signal != signal or w.count < rule.min_samples:
+                continue
+            stat = w.stat(rule.stat)
+            if stat is None:
+                continue
+            rkey = (rule.name, label)
+            if rule.breached(stat):
+                if rkey not in self._breached:
+                    self._breached.add(rkey)
+                    self._fire(rule.name, signal, label, rule.stat,
+                               stat, rule.threshold, t)
+            else:
+                self._breached.discard(rkey)
+
+    def _counter(self, name: str, t: float, values: dict) -> None:
+        if self.tracer is not None and values:
+            self.tracer.counter(f"health.{name}", track=f"health:{name}",
+                                t=t, values=values)
+
+    def _fire(self, name, signal, label, stat, value, threshold, t) -> None:
+        rec = {"rule": name, "signal": signal, "label": label, "stat": stat,
+               "value": float(value),
+               "threshold": None if threshold is None else float(threshold),
+               "t_virtual_s": float(t)}
+        self.anomalies.append(rec)
+        labels = {"cluster": label} if label else {}
+        self.registry.counter("health.anomalies").inc(rule=name, **labels)
+        if self.tracer is not None:
+            self.tracer.instant(f"anomaly:{name}", track="health:anomaly",
+                                t=t, cat="health", args=rec)
+        if self.runlog is not None:
+            where = f" [{label}]" if label else ""
+            self.runlog.log(
+                "health",
+                msg=f"[health] ANOMALY {name}{where}: {signal}.{stat}="
+                    f"{value:.4g} vs {threshold}",
+                **rec)
+
+    # --- sync-step statistics (from core/hfl collect_stats) ---------------
+
+    def ingest_sync_stats(self, stats: dict, *, t: float) -> None:
+        """Consume the stats dict a lockstep sync step returned: per-
+        cluster drift/eps norms, global e/wref/update norms, Ω index
+        sets. One host transfer per array; all already computed in-jit."""
+        drift = np.asarray(stats["drift"], np.float64)
+        eps = np.asarray(stats["eps_norm"], np.float64)
+        wref = float(stats["wref_norm"])
+        denom = max(wref, 1e-30)
+        e = float(stats["e_norm"])
+        for n in range(drift.size):
+            self.observe("drift", drift[n], t=t, label=f"c{n}")
+            self.observe("eps_norm", eps[n], t=t, label=f"c{n}")
+        self.observe("e_norm", e, t=t)
+        resid = (e + float(eps.max())) / denom if eps.size else e / denom
+        self.observe("resid_ratio", resid, t=t)
+        upd = float(stats["update_norm"]) / denom
+        self.observe("update_ratio", upd, t=t)
+        self._counter("drift", t,
+                      {f"c{n}": drift[n] for n in range(drift.size)})
+        self._counter("residual", t,
+                      {"resid_ratio": resid, "update_ratio": upd})
+        ul = stats.get("ul_idx")
+        if ul is not None:
+            ul = np.asarray(ul)
+            prev = self._prev_ul_idx.get("all")
+            if prev is not None and prev.shape == ul.shape:
+                ov = {}
+                for n in range(ul.shape[0]):
+                    frac = np.intersect1d(prev[n], ul[n]).size / ul.shape[1]
+                    self.observe("omega_overlap_ul", frac, t=t, label=f"c{n}")
+                    ov[f"c{n}"] = frac
+                self._counter("omega_overlap", t, ov)
+            self._prev_ul_idx["all"] = ul
+        dl = stats.get("dl_idx")
+        if dl is not None:
+            dl = np.asarray(dl)
+            if self._prev_dl_idx is not None and \
+                    self._prev_dl_idx.shape == dl.shape:
+                frac = np.intersect1d(self._prev_dl_idx, dl).size / dl.size
+                self.observe("omega_overlap_dl", frac, t=t)
+            self._prev_dl_idx = dl
+
+    def ingest_async_sync_stats(self, stats: dict, n: int, staleness: int,
+                                *, t: float) -> None:
+        """Per-cluster variant for the async discipline: scalar stats for
+        the one cluster that just synced, plus its staleness."""
+        label = f"c{n}"
+        drift = float(stats["drift"])
+        epsn = float(stats["eps_norm"])
+        denom = max(float(stats["wref_norm"]), 1e-30)
+        self.observe("drift", drift, t=t, label=label)
+        self.observe("eps_norm", epsn, t=t, label=label)
+        resid = epsn
+        if "e_dl_norm" in stats:
+            resid += float(stats["e_dl_norm"])
+        self.observe("resid_ratio", resid / denom, t=t, label=label)
+        self.observe("update_ratio",
+                     float(stats["update_norm"]) / denom, t=t, label=label)
+        self.observe("staleness", float(staleness), t=t, label=label)
+        self._counter("drift", t, {label: drift})
+        self._counter("staleness", t, {label: float(staleness)})
+        ul = stats.get("ul_idx")
+        if ul is not None:
+            ul = np.asarray(ul)
+            prev = self._prev_ul_idx.get(n)
+            if prev is not None and prev.shape == ul.shape:
+                frac = np.intersect1d(prev, ul).size / ul.size
+                self.observe("omega_overlap_ul", frac, t=t, label=label)
+                self._counter("omega_overlap", t, {label: frac})
+            self._prev_ul_idx[n] = ul
+
+    # --- fleet signals (from sim/engine) ----------------------------------
+
+    def ingest_round(self, participated, *, t: float) -> None:
+        """One lockstep/deadline round: boolean participation per cluster
+        (array-level; drives the dead/starved-cluster rule)."""
+        part = np.asarray(participated, bool)
+        if self._idle is None or self._idle.size != part.size:
+            self._idle = np.zeros(part.size, np.int64)
+        self._idle = np.where(part, 0, self._idle + 1)
+        for n in range(part.size):
+            self.observe("idle_rounds", float(self._idle[n]), t=t,
+                         label=f"c{n}")
+        self._counter("participation", t,
+                      {f"c{n}": float(part[n]) for n in range(part.size)})
+
+    def ingest_cluster_round(self, n: int, participated: bool, *,
+                             t: float) -> None:
+        """Async variant of ``ingest_round``: one cluster's round outcome
+        at a time (rounds interleave, so there is no per-round [N] mask)."""
+        c = 0 if participated else self._idle_by.get(n, 0) + 1
+        self._idle_by[n] = c
+        self.observe("idle_rounds", float(c), t=t, label=f"c{n}")
+
+    def ingest_loss(self, loss: float, *, t: float) -> None:
+        self.observe("loss", loss, t=t)
+        self._counter("loss", t, {"loss": float(loss)})
+
+    def ingest_payload(self, bits: float, *, t: float) -> None:
+        self.observe("payload_bits", bits, t=t)
+
+    def ingest_churn(self, moved: float, *, t: float) -> None:
+        self.observe("residency_churn", moved, t=t)
+        self._counter("churn", t, {"moved": float(moved)})
+
+    # --- reporting --------------------------------------------------------
+
+    def summary(self) -> dict:
+        """Plain-JSON run summary (the ``health_summary`` JSONL event)."""
+        by_rule: dict = {}
+        for a in self.anomalies:
+            by_rule[a["rule"]] = by_rule.get(a["rule"], 0) + 1
+        return {"anomalies": len(self.anomalies),
+                "by_rule": dict(sorted(by_rule.items())),
+                "signals": sorted({s for s, _ in self._windows})}
+
+
+class NullHealthMonitor:
+    """Disabled monitor: one shared instance, every method a no-op."""
+
+    enabled = False
+    runlog = None
+    anomalies: list = []
+
+    def reset_run(self) -> None:
+        pass
+
+    def observe(self, signal, value, *, t, label="") -> None:
+        pass
+
+    def ingest_sync_stats(self, stats, *, t) -> None:
+        pass
+
+    def ingest_async_sync_stats(self, stats, n, staleness, *, t) -> None:
+        pass
+
+    def ingest_round(self, participated, *, t) -> None:
+        pass
+
+    def ingest_cluster_round(self, n, participated, *, t) -> None:
+        pass
+
+    def ingest_loss(self, loss, *, t) -> None:
+        pass
+
+    def ingest_payload(self, bits, *, t) -> None:
+        pass
+
+    def ingest_churn(self, moved, *, t) -> None:
+        pass
+
+    def summary(self) -> dict:
+        return {}
+
+
+NULL_HEALTH = NullHealthMonitor()

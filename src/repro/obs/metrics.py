@@ -118,12 +118,30 @@ class Histogram:
         s[4] += np.bincount(np.searchsorted(self.buckets, v),
                             minlength=len(self.buckets) + 1)
 
+    def _quantile(self, bc, q: float, count: int, mn: float, mx: float):
+        """Deterministic quantile estimate from the bucket counts: walk
+        the sorted bucket bounds until the cumulative count reaches the
+        rank, report that bucket's upper bound clamped to the observed
+        [min, max]. Exact when a bucket holds one distinct value; within
+        one log-decade otherwise — stable across hosts either way."""
+        rank = q * count
+        cum = 0
+        for i, c in enumerate(bc):
+            cum += int(c)
+            if cum >= rank:
+                hi = self.buckets[i] if i < len(self.buckets) else mx
+                return float(min(max(hi, mn), mx))
+        return float(mx)
+
     def _snap(self):
         out = {}
         for k, (count, total, mn, mx, bc) in sorted(self.series.items()):
             out[_label_str(k)] = {
                 "count": count, "sum": total, "min": mn, "max": mx,
                 "mean": total / count,
+                "p50": self._quantile(bc, 0.50, count, mn, mx),
+                "p95": self._quantile(bc, 0.95, count, mn, mx),
+                "p99": self._quantile(bc, 0.99, count, mn, mx),
                 "buckets": [int(c) for c in bc],
             }
         return out

@@ -125,6 +125,21 @@ class SpanTracer:
             ev["args"] = args
         self.events.append(ev)
 
+    def counter(self, name: str, *, track: str, t: float, values: dict,
+                pid: int = VIRTUAL_PID, cat: str = "health") -> None:
+        """One Chrome counter sample (``ph="C"``): Perfetto renders each
+        key of ``values`` as a stacked series on the named track. The
+        health monitor emits its divergence/residual/staleness series
+        here so they plot against the same virtual timeline as the spans.
+        Callers must emit in nondecreasing ``t`` per track (the validator
+        enforces the same ordering rule as for spans)."""
+        if len(self.events) >= self.max_events:
+            self.dropped += 1
+            return
+        self.events.append({"name": name, "cat": cat, "ph": "C", "pid": pid,
+                            "tid": self._tid(pid, track), "ts": t * 1e6,
+                            "args": {k: float(v) for k, v in values.items()}})
+
     def link_span(self, link: str, *, t0: float, dur: float, bits: float,
                   name=None, track=None, args=None) -> None:
         """Payload-carrying span: the span's ``args["bits"]`` is the exact

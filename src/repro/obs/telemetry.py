@@ -16,6 +16,7 @@ import sys
 import time
 
 from repro.obs.config import ObsConfig
+from repro.obs.health import NULL_HEALTH, HealthMonitor
 from repro.obs.metrics import (
     NULL_REGISTRY, MetricsRegistry, NullRegistry, set_registry,
 )
@@ -32,6 +33,12 @@ class Telemetry:
         self.registry = MetricsRegistry()
         self.tracer = SpanTracer(max_events=cfg.max_trace_events)
         self.host = bool(cfg.host_spans)
+        if getattr(cfg, "health", False):
+            self.health = HealthMonitor(
+                window=getattr(cfg, "health_window", 64),
+                registry=self.registry, tracer=self.tracer)
+        else:
+            self.health = NULL_HEALTH
         # heartbeat state (events/s + live bytes, long fleet runs)
         self._hb_every = int(cfg.heartbeat_events)
         self._events = 0
@@ -54,6 +61,7 @@ class Telemetry:
 
     def reset_run(self) -> None:
         self.tracer.reset_run()
+        self.health.reset_run()
         self._events = 0
         self._hb_last = 0
         self._hb_t = time.perf_counter()
@@ -106,6 +114,7 @@ class NullTelemetry:
     cfg = None
     registry: NullRegistry = NULL_REGISTRY
     tracer = None
+    health = NULL_HEALTH
 
     def host_span(self, name: str, track: str = "engine"):
         return NULL_SPAN

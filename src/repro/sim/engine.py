@@ -143,7 +143,8 @@ def async_weight(staleness: int, num_clusters: int, exp: float = 1.0) -> float:
 
 
 def make_async_sync_step(
-    hfl_cfg: HFLConfig, *, dl_sparse: bool = False, codec=None
+    hfl_cfg: HFLConfig, *, dl_sparse: bool = False, codec=None,
+    collect_stats: bool = False,
 ) -> Callable:
     """Per-cluster staleness-weighted sparse sync.
 
@@ -217,27 +218,58 @@ def make_async_sync_step(
 
         new_wn = wn_all.at[n].set(new_row)
         new_eps = eps_all.at[n].set(new_eps_n)
+        stats = None
+        if collect_stats:
+            # health-monitor signals for THIS cluster (scalar variants of
+            # the lockstep ``_flat_sync_stats``); computed from values the
+            # sync already holds, so no extra HBM round-trips
+            wbar = jnp.mean(new_wn, axis=0)
+            wnorm = jnp.maximum(jnp.linalg.norm(wbar), 1e-30)
+            stats = {
+                "drift": jnp.linalg.norm(new_wn[n] - wbar) / wnorm,
+                "eps_norm": jnp.linalg.norm(new_eps_n),
+                "wref_norm": jnp.linalg.norm(new_wref),
+                "update_norm": jnp.linalg.norm(weight * sent),
+                "ul_idx": idx,
+            }
+            if dl_sparse:
+                stats["e_dl_norm"] = jnp.linalg.norm(e_dl[n])
+                stats["dl_idx"] = didx
         state = state._replace(
             params=fl.unpack_stacked(new_wn, p_spec),
             w_ref=fl.unpack(new_wref, ref_spec),
             eps=fl.unpack_stacked(new_eps, eps_spec),
         )
-        return state, e_dl, bits
+        return state, e_dl, bits, stats
 
     if dl_sparse:
 
         @partial(jax.jit, donate_argnums=(0, 1))
         def async_sync_dl(state, e_dl, n, weight):
-            state, e_dl, bits = _core(state, e_dl, n, weight)
-            return (state, e_dl, bits) if codec is not None else (state, e_dl)
+            state, e_dl, bits, stats = _core(state, e_dl, n, weight)
+            out = (state, e_dl)
+            if codec is not None:
+                out = out + (bits,)
+            if collect_stats:
+                out = out + (stats,)
+            return out
 
+        async_sync_dl.collect_stats = collect_stats
         return async_sync_dl
 
     @partial(jax.jit, donate_argnums=0)
     def async_sync(state, n, weight):
-        state, _, bits = _core(state, None, n, weight)
-        return (state, bits) if codec is not None else state
+        state, _, bits, stats = _core(state, None, n, weight)
+        if codec is None and not collect_stats:
+            return state
+        out = (state,)
+        if codec is not None:
+            out = out + (bits,)
+        if collect_stats:
+            out = out + (stats,)
+        return out
 
+    async_sync.collect_stats = collect_stats
     return async_sync
 
 
@@ -367,6 +399,11 @@ class SimEngine:
         self._sync_launches = 0
         self._bits_access = 0.0
         self._bits_fronthaul = 0.0
+        # fleet-health bookkeeping (obs on only): per-cluster rounds seen /
+        # rounds contributed, feeding sim.participation_rate and the
+        # drop-fairness Gini at _finish_run
+        self._rounds_part = None
+        self._rounds_seen = None
         # measured-bits accounting (repro.comm): byte-accurate codec streams
         # replace the analytic Q·(1-φ)·bits_per_param in both event pricing
         # and the trace's byte totals. Ledger/probe are sized to the REAL
@@ -387,6 +424,9 @@ class SimEngine:
             from repro.comm.codecs import get_codec
 
             self._codec = get_codec(self.hfl.codec)
+        if self.wireless:
+            # index_bits deprecation fires under BOTH accounting modes now
+            # (analytic pricing reads it too); once per process
             from repro.comm.accounting import warn_index_bits_deprecated
 
             warn_index_bits_deprecated(self.lp)
@@ -423,6 +463,12 @@ class SimEngine:
         self._bits_access = 0.0
         self._bits_fronthaul = 0.0
         self._slot_rot = 0
+        if self.obs.enabled and self.hfl is not None:
+            n_cl = self.hfl.num_clusters
+            self._rounds_part = np.zeros(n_cl, np.int64)
+            self._rounds_seen = np.zeros(n_cl, np.int64)
+        else:
+            self._rounds_part = self._rounds_seen = None
         self.obs.reset_run()
         self._setup_measured(state)
         disc = self.sim.discipline
@@ -572,6 +618,12 @@ class SimEngine:
         cid = self.fleet.cid
         comp = self.fleet.compute_times(self.sim.base_compute_s)
         avail = self.fleet.draw_available(self._vt)
+        fault = getattr(self.sim, "fault_dead_cluster", None)
+        if fault is not None:
+            # fault injection lands AFTER the RNG draw so the availability
+            # stream (and thus every other cluster's trajectory) is
+            # untouched — the faulted cluster's members just never come up
+            avail = avail & (cid != fault)
         N = hfl.num_clusters
         ul_pay = (float(self._ab["mu_ul"]) if self.ledger is not None
                   else lp.payload(hfl.phi_mu_ul))
@@ -702,6 +754,7 @@ class SimEngine:
                 args={"dt_s": dt, "reassociations": moved})
             self.obs.registry.counter("sim.reprices").inc()
             self.obs.registry.counter("sim.reassociations").inc(moved)
+            self.obs.health.ingest_churn(moved, t=now)
 
     # --- data residency ---------------------------------------------------
 
@@ -921,8 +974,32 @@ class SimEngine:
         reg.counter("sim.sync_launches").inc(self._sync_launches)
         reg.counter("sim.bits_access").inc(self._bits_access)
         reg.counter("sim.bits_fronthaul").inc(self._bits_fronthaul)
+        part, seen = self._rounds_part, self._rounds_seen
+        if part is not None and int(seen.sum()) > 0:
+            rate = part / np.maximum(seen, 1)
+            for n in range(part.size):
+                reg.gauge("sim.participation_rate").set(
+                    float(rate[n]), cluster=f"c{n}")
+            # drop-fairness: Gini over rounds contributed (0 = every
+            # cluster trained equally often, ->1 = one cluster hogs)
+            x = np.sort(part.astype(np.float64))
+            k, s = x.size, float(x.sum())
+            gini = 0.0 if s <= 0 or k < 2 else float(
+                2.0 * np.sum(np.arange(1, k + 1) * x) / (k * s)
+                - (k + 1) / k)
+            reg.gauge("sim.drop_gini").set(gini)
         if self.ledger is not None:
             self.obs.check_conservation(self.ledger)
+
+    def _mark_round(self, n: int, participated: bool, t: float) -> None:
+        """Per-cluster round outcome under async (obs on only): feeds the
+        participation/Gini tallies and the dead-cluster health signal."""
+        if self._rounds_seen is None:
+            return
+        self._rounds_seen[n] += 1
+        if participated:
+            self._rounds_part[n] += 1
+        self.obs.health.ingest_cluster_round(int(n), participated, t=t)
 
     # --- span emission (telemetry on only; never touches sim state) ------
 
@@ -989,6 +1066,11 @@ class SimEngine:
         t = 0.0
         ctx: dict = {}
         N = self.hfl.num_clusters if self.hfl is not None else None
+        # health stats ride the sync step only when BOTH the monitor is on
+        # and the caller built the sync with collect_stats (jit_sync_step
+        # propagates the flag onto the jitted callable)
+        stats_on = (self.obs.health.enabled
+                    and bool(getattr(sync_step, "collect_stats", False)))
         for step in range(num_steps):
             if step % H == 0:
                 # _round_ctx draws the slot sources itself (residency runs)
@@ -996,6 +1078,17 @@ class SimEngine:
                 # virtual clock feeds the diurnal availability curve
                 self._vt = t
                 ctx = self._round_ctx(deadline)
+                if self._rounds_seen is not None:
+                    src = ctx.get("src")
+                    if src is not None:
+                        part = src[:, 0] >= 0
+                    elif ctx["keep_clusters"] is not None:
+                        part = np.asarray(ctx["keep_clusters"], bool)
+                    else:
+                        part = np.ones(N, bool)
+                    self._rounds_seen += 1
+                    self._rounds_part += part
+                    self.obs.health.ingest_round(part, t=t)
             if self.residency is not None:
                 batch, keep = self._gather_batch(next(it), ctx["src"])
             else:
@@ -1014,9 +1107,12 @@ class SimEngine:
                 ctx.get("active_clusters", N if N is not None else 1))
             if self.obs.enabled:
                 self._trace_train_step(step, t_iter0, ctx, ul_b, dl_b)
-            if self._record:
-                trace.add(kind="train", t=t, step=step,
-                          loss=float(jnp.mean(loss)), dropped=ctx["dropped"])
+            if self._record or self.obs.health.enabled:
+                loss_mean = float(jnp.mean(loss))
+                self.obs.health.ingest_loss(loss_mean, t=t)
+                if self._record:
+                    trace.add(kind="train", t=t, step=step, loss=loss_mean,
+                              dropped=ctx["dropped"])
             if (step + 1) % H == 0:
                 sync_s = ctx["sync_s"]
                 row_extra = {}
@@ -1064,12 +1160,18 @@ class SimEngine:
                     sync_ul, sync_dl = self._count_sync(
                         N if N is not None else 1)
                 with self.obs.host_span("sync_step"):
-                    state = sync_step(state)
+                    if stats_on:
+                        state, sstats = sync_step(state)
+                    else:
+                        state = sync_step(state)
                 t_sync0 = t
                 t += sync_s
                 if self.obs.enabled:
                     self._trace_sync(step, t_sync0, sync_s, sync_ul,
                                      sync_dl, bcast_b, fh_parts, row_extra)
+                if stats_on:
+                    self.obs.health.ingest_sync_stats(sstats, t=t)
+                    self.obs.health.ingest_payload(sync_ul + sync_dl, t=t)
                 if self._record:
                     trace.add(kind="sync", t=t, step=step,
                               dropped=ctx["dropped"],
@@ -1133,9 +1235,11 @@ class SimEngine:
         q = EventQueue()
         dl_sparse = bool(getattr(hfl, "async_dl_sparse", False))
         measured = self.ledger is not None
+        stats_on = self.obs.health.enabled
         sync_n = make_async_sync_step(
             hfl, dl_sparse=dl_sparse,
             codec=self._codec if measured else None,
+            collect_stats=stats_on,
         )
         e_dl = init_dl_error(state, hfl) if dl_sparse else None
         comp = (
@@ -1173,6 +1277,12 @@ class SimEngine:
             avail = (self.fleet.draw_available(t)
                      if self.fleet is not None and self.fleet.dropout > 0
                      else None)
+            fault = getattr(self.sim, "fault_dead_cluster", None)
+            if fault is not None and self.fleet is not None:
+                # post-draw fault masking, same contract as _round_ctx
+                if avail is None:
+                    avail = np.ones(self.fleet.K, bool)
+                avail = avail & (self.fleet.cid != fault)
             if self.residency is not None:
                 src = self._slot_sources(avail)
                 # resident/survivor counts as boolean row sums (the member
@@ -1190,6 +1300,7 @@ class SimEngine:
                             "idle", track=f"cluster{n}", t0=round_t0[n],
                             dur=t - round_t0[n],
                             args={"round": int(ev.round), "dropped": dropped})
+                    self._mark_round(n, False, t)
                     round_t0[n] = t
                     self.obs.tick()
                     if ev.round + 1 < rounds:
@@ -1209,6 +1320,7 @@ class SimEngine:
                             "idle", track=f"cluster{n}", t0=round_t0[n],
                             dur=t - round_t0[n],
                             args={"round": int(ev.round), "dropped": dropped})
+                    self._mark_round(n, False, t)
                     round_t0[n] = t
                     self.obs.tick()
                     if ev.round + 1 < rounds:
@@ -1297,15 +1409,23 @@ class SimEngine:
                     tr_.link_span("sbs_dl", t0=it0, dur=iter_w, bits=dl_b,
                                   name="train_dl", track=f"cluster{n}")
             bits = None
+            sstats = None
             with self.obs.host_span("sync_step"):
-                if dl_sparse and measured:
-                    state, e_dl, bits = sync_n(state, e_dl, nj, wj)
-                elif dl_sparse:
-                    state, e_dl = sync_n(state, e_dl, nj, wj)
-                elif measured:
-                    state, bits = sync_n(state, nj, wj)
+                # variants append (bits?, stats?) after the carried state
+                if dl_sparse:
+                    out = sync_n(state, e_dl, nj, wj)
+                    state, e_dl, rest = out[0], out[1], out[2:]
+                elif measured or stats_on:
+                    out = sync_n(state, nj, wj)
+                    state, rest = out[0], out[1:]
                 else:
-                    state = sync_n(state, nj, wj)
+                    # bare-state return; HFLState is itself a NamedTuple,
+                    # so an isinstance(tuple) arity probe would unpack it
+                    state, rest = sync_n(state, nj, wj), ()
+                if measured:
+                    bits, rest = rest[0], rest[1:]
+                if stats_on:
+                    sstats = rest[0]
             global_updates += 1
             last_pull[n] = global_updates
             if measured:
@@ -1316,6 +1436,14 @@ class SimEngine:
                     [float(bits["sbs_ul"])], dl_b)
             else:
                 s_ul, s_dl = self._count_sync(1)
+            if self.obs.enabled:
+                self.obs.registry.histogram("sim.staleness").observe(
+                    float(staleness), cluster=f"c{n}")
+            if sstats is not None:
+                self.obs.health.ingest_async_sync_stats(
+                    sstats, n, staleness, t=t)
+                self.obs.health.ingest_payload(s_ul + s_dl, t=t)
+            self._mark_round(n, True, t)
             if self.obs.enabled:
                 tr_ = self.obs.tracer
                 t_s0 = t - sync_tail
@@ -1331,15 +1459,17 @@ class SimEngine:
                     tr_.link_span("mbs_dl", t0=t_s0, dur=sync_tail,
                                   bits=s_dl, name="sync_dl",
                                   track=f"cluster{n}")
-            if self._record:
+            if self._record or stats_on:
                 # the ACTIVE cluster's loss: the vmapped fallback computes
                 # all N rows but only row n was merged (the masked step
                 # returns row n's scalar directly)
-                loss_n = loss if jnp.ndim(loss) == 0 else loss[n]
-                trace.add(kind="sync", t=t, step=steps_done - 1,
-                          cluster=int(n), round=int(ev.round),
-                          staleness=int(staleness), weight=float(w),
-                          dropped=dropped, loss=float(loss_n))
+                loss_n = float(loss if jnp.ndim(loss) == 0 else loss[n])
+                self.obs.health.ingest_loss(loss_n, t=t)
+                if self._record:
+                    trace.add(kind="sync", t=t, step=steps_done - 1,
+                              cluster=int(n), round=int(ev.round),
+                              staleness=int(staleness), weight=float(w),
+                              dropped=dropped, loss=loss_n)
             if on_step is not None:
                 on_step(steps_done - 1, state, loss)
             if ev.round + 1 < rounds:

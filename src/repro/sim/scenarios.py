@@ -23,6 +23,9 @@ Each scenario bundles a ``SimConfig`` (fleet + discipline knobs) with the
   * ``manhattan``   — street-grid mobility replay under the deadline
                       discipline: abrupt, correlated re-associations plus
                       straggler drop with sub-carrier reclamation.
+  * ``fault-dead-cluster`` — paper-fig3 layout with one cluster's MUs
+                      forced unavailable every round (post-RNG-draw mask);
+                      the health monitor's dead-cluster anomaly must fire.
   * ``diurnal``     — lockstep under a sinusoidal availability curve:
                       unavailability swings through a compressed "day"
                       within the run, so participation (and survivor
@@ -129,6 +132,16 @@ SCENARIOS = {
         hfl=dict(sync_mode="sparse", **PAPER_PHIS),
         note="street-grid trace replay + deadline drop; survivors inherit "
              "reclaimed sub-carriers",
+    ),
+    "fault-dead-cluster": Scenario(
+        name="fault-dead-cluster", kind="train",
+        sim=SimConfig(scenario="fault-dead-cluster", discipline="lockstep",
+                      dropout=0.1, fault_dead_cluster=2),
+        hfl=dict(num_clusters=7, mus_per_cluster=4, period=2,
+                 sync_mode="sparse", **PAPER_PHIS),
+        note="paper-fig3 layout with cluster 2's MUs forced dead every "
+             "round (post-draw mask): exercises the health monitor's "
+             "dead/starved-cluster anomaly",
     ),
     "diurnal": Scenario(
         name="diurnal", kind="train",

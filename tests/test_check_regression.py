@@ -146,3 +146,40 @@ def test_fused_sync_keys_gated():
     assert not _is_gated("sync/sparse/phi=0.9/N=4/leaves=12/fused_over_leaf")
     assert not _is_gated("sync/sparse/phi=0.9/N=4/leaves=12/"
                          "fused_mask_identical")
+
+
+def test_floor_gate_tracing_ratio():
+    from benchmarks.check_regression import _matches_floor, check_floors
+
+    assert _matches_floor("tracing-overhead/tracing_on_over_off") == 0.9
+    assert _matches_floor("tracing-overhead/events_per_s_tracing_on") is None
+    base = {"tracing-overhead/tracing_on_over_off": 0.97}
+    # above the floor: clean
+    v, m = check_floors(base, {"tracing-overhead/tracing_on_over_off": 0.95})
+    assert not v and not m
+    # below: violation with the floor attached
+    v, m = check_floors(base, {"tracing-overhead/tracing_on_over_off": 0.85})
+    assert v == [("tracing-overhead/tracing_on_over_off", 0.85, 0.9)] and not m
+    # dropped from the fresh artifact: missing, the gate must not rot away
+    v, m = check_floors(base, {"other": 1.0})
+    assert not v and m == ["tracing-overhead/tracing_on_over_off"]
+
+
+def test_main_floor_gate_end_to_end(tmp_path):
+    art = str(tmp_path / "artifacts")
+    basedir = str(tmp_path / "baselines")
+    gate = ["--artifact-dir", art, "--baseline-dir", basedir,
+            "BENCH_sim.json"]
+    _write(os.path.join(art, "BENCH_sim.json"),
+           {"tracing-overhead": {"tracing_on_over_off": 0.97}})
+    assert main(["--artifact-dir", art, "--baseline-dir", basedir,
+                 "--update"]) == 0
+    assert main(gate) == 0
+    # the floor is absolute: a fresh 0.8 fails even though it is within
+    # 25% of the blessed 0.97 (no baseline-relative ratchet)
+    _write(os.path.join(art, "BENCH_sim.json"),
+           {"tracing-overhead": {"tracing_on_over_off": 0.8}})
+    assert main(gate) == 1
+    # dropping the key entirely also fails
+    _write(os.path.join(art, "BENCH_sim.json"), {"tracing-overhead": {}})
+    assert main(gate) == 1

@@ -2,6 +2,8 @@
 invariants (closed-form == jax-traced == 8·len(encode)), analytic-vs-
 measured agreement, the bitpack Pallas kernel, the sync probe's fidelity to
 the real sync payloads, and the engine's measured pricing."""
+import warnings
+
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -349,14 +351,44 @@ def test_engine_measured_replays_bit_identically():
 
 
 def test_measured_mode_warns_on_index_bits():
+    from repro.comm.accounting import _reset_index_bits_warning
+
+    _reset_index_bits_warning()
     hfl = HFLConfig(num_clusters=2, mus_per_cluster=1,
                     payload_accounting="measured")
+    topo = HCNTopology(num_clusters=2, seed=0)
+    fleet = DeviceFleet(topo, 1, seed=0)
+    lp = LatencyParams(model_params=1e5, index_bits=32.0)
+    with pytest.warns(DeprecationWarning):
+        SimEngine(period=2, hfl_cfg=hfl, sim_cfg=SimConfig(),
+                  topo=topo, fleet=fleet, lp=lp)
+    # once per process: a second engine must NOT warn again
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        SimEngine(period=2, hfl_cfg=hfl, sim_cfg=SimConfig(),
+                  topo=topo, fleet=fleet, lp=lp)
+
+
+def test_analytic_mode_warns_on_index_bits():
+    """The deprecation fires under ANALYTIC accounting too (measured-era
+    params on the legacy pricing path double-charge just the same)."""
+    from repro.comm.accounting import _reset_index_bits_warning
+
+    _reset_index_bits_warning()
+    hfl = HFLConfig(num_clusters=2, mus_per_cluster=1)  # analytic default
     topo = HCNTopology(num_clusters=2, seed=0)
     fleet = DeviceFleet(topo, 1, seed=0)
     with pytest.warns(DeprecationWarning):
         SimEngine(period=2, hfl_cfg=hfl, sim_cfg=SimConfig(),
                   topo=topo, fleet=fleet,
                   lp=LatencyParams(model_params=1e5, index_bits=32.0))
+    # index_bits=0 (the paper default) stays silent
+    _reset_index_bits_warning()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        SimEngine(period=2, hfl_cfg=hfl, sim_cfg=SimConfig(),
+                  topo=topo, fleet=fleet,
+                  lp=LatencyParams(model_params=1e5))
 
 
 def test_measured_mode_requires_wireless():

@@ -1,0 +1,551 @@
+"""Learning-health observability tests: streaming windows + declarative
+anomaly rules, the HealthMonitor's three-way emission (registry gauges,
+Perfetto counter tracks, structured JSONL anomalies) with breach
+latching, in-jit sync statistics on real engine runs and the
+bit-identical-replay guarantee with health on vs off, fleet-health
+signals (participation rates, drop-fairness Gini, the injected
+dead-cluster fault), histogram quantiles, runlog schema validation over
+a real ``--obs-health`` paper-fig3 run, and the stdlib-only
+``tools/run_compare.py`` regression-attribution CLI."""
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HFLConfig
+from repro.core.hfl import (
+    hfl_init, jit_sync_step, make_cluster_train_step, make_sync_step,
+)
+from repro.obs import (
+    MetricsRegistry, ObsConfig, RunLogger, SpanTracer, VIRTUAL_PID,
+    validate_trace,
+)
+from repro.obs.health import NULL_HEALTH, HealthMonitor
+from repro.obs.health.rules import DEFAULT_RULES, Rule, Window
+from repro.obs.metrics import current_registry, set_registry
+from repro.obs.runlog import validate_runlog
+from repro.optim import SGDM
+from repro.sim.scenarios import apply_hfl_overrides, build_engine, get_scenario
+from repro.wireless.latency import LatencyParams
+
+TOOLS = Path(__file__).resolve().parents[1] / "tools"
+
+_spec = importlib.util.spec_from_file_location(
+    "_run_compare", TOOLS / "run_compare.py")
+run_compare = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(run_compare)
+
+
+@pytest.fixture(autouse=True)
+def _ambient_registry_guard():
+    """Telemetry() installs itself as the ambient registry; restore the
+    module default after every test so tests stay order-independent."""
+    prev = current_registry()
+    yield
+    set_registry(prev)
+
+
+# ---------------------------------------------------------------------------
+# Windows + rules
+# ---------------------------------------------------------------------------
+
+
+def test_window_stats_and_eviction():
+    w = Window(4)
+    assert w.stat("last") is None  # empty window: undefined, not 0
+    for v in (1.0, 2.0, 3.0, 4.0, 5.0):
+        w.push(v)
+    assert w.count == 4  # maxlen evicted the 1.0
+    assert w.stat("last") == 5.0
+    assert w.stat("mean") == pytest.approx(3.5)
+    assert w.stat("max") == 5.0
+    assert w.stat("ratio_to_mean") == pytest.approx(5.0 / 3.0)
+    with pytest.raises(ValueError):
+        w.stat("median")
+
+
+def test_window_p95_is_a_deterministic_order_statistic():
+    w = Window(200)
+    for v in range(1, 101):
+        w.push(float(v))
+    assert w.stat("p95") == 95.0
+    assert w.stat("p95") == w.stat("p95")  # sorts a copy, no mutation
+
+
+def test_window_ratio_to_mean_undefined_cases():
+    w = Window(8)
+    w.push(1.0)
+    assert w.stat("ratio_to_mean") is None  # no predecessors yet
+    w = Window(8)
+    w.push(0.0)
+    w.push(5.0)
+    assert w.stat("ratio_to_mean") is None  # zero running mean
+
+
+def test_rule_breach_directions():
+    hi = Rule("hi", "s", "last", ">", 2.0)
+    assert hi.breached(3.0) and not hi.breached(2.0)
+    lo = Rule("lo", "s", "last", "<", 2.0)
+    assert lo.breached(1.0) and not lo.breached(2.0)
+
+
+def test_default_rules_cover_the_issue_anomaly_classes():
+    assert {r.name for r in DEFAULT_RULES} == {
+        "divergence-blowup", "residual-runaway", "dead-cluster",
+        "staleness-breach", "loss-spike", "payload-outlier"}
+
+
+# ---------------------------------------------------------------------------
+# HealthMonitor: emission, latching, overlap, null path
+# ---------------------------------------------------------------------------
+
+
+def _monitor(**kw):
+    reg = MetricsRegistry()
+    return HealthMonitor(registry=reg, **kw), reg
+
+
+def test_anomaly_fires_on_breach_entry_and_latches():
+    mon, reg = _monitor()
+    # dead-cluster: idle_rounds last > 6
+    for v in (5.0, 6.5, 7.0, 8.0):  # 6.5 breaches; 7/8 are the same breach
+        mon.observe("idle_rounds", v, t=1.0, label="c1")
+    assert [a["rule"] for a in mon.anomalies] == ["dead-cluster"]
+    mon.observe("idle_rounds", 0.0, t=2.0, label="c1")  # recovery unlatches
+    mon.observe("idle_rounds", 9.0, t=3.0, label="c1")  # re-entry refires
+    assert len(mon.anomalies) == 2
+    a = mon.anomalies[0]
+    assert a["signal"] == "idle_rounds" and a["label"] == "c1"
+    assert a["value"] == 6.5 and a["threshold"] == 6.0
+    snap = reg.snapshot()
+    assert snap["health.idle_rounds"]["series"]["cluster=c1"] == 9.0
+    assert snap["health.anomalies"]["series"][
+        "cluster=c1,rule=dead-cluster"] == 2.0
+
+
+def test_nonfinite_observation_is_itself_the_anomaly():
+    mon, _ = _monitor()
+    mon.observe("loss", float("nan"), t=0.5)
+    assert [a["rule"] for a in mon.anomalies] == ["non-finite"]
+    # the NaN never entered the window, so the stream stays usable
+    mon.observe("loss", 1.0, t=1.0)
+    assert mon._windows[("loss", "")].count == 1
+
+
+def test_anomaly_streams_a_valid_health_jsonl_event(tmp_path):
+    mon, _ = _monitor()
+    p = tmp_path / "run.jsonl"
+    log = RunLogger(str(p), echo=False)
+    mon.runlog = log
+    mon.observe("idle_rounds", 7.0, t=3.0, label="c0")
+    log.log("health_summary", None, **mon.summary())
+    log.close()
+    assert validate_runlog(p) == []
+    recs = [json.loads(l) for l in p.read_text().splitlines()]
+    assert recs[0]["event"] == "health"
+    assert recs[0]["rule"] == "dead-cluster" and recs[0]["t_virtual_s"] == 3.0
+    assert recs[1]["event"] == "health_summary"
+    assert recs[1]["anomalies"] == 1
+    assert recs[1]["by_rule"] == {"dead-cluster": 1}
+
+
+def test_omega_overlap_from_consecutive_index_sets():
+    mon, reg = _monitor()
+    base = dict(drift=np.zeros(2), eps_norm=np.zeros(2), e_norm=0.0,
+                wref_norm=1.0, update_norm=0.0)
+    idx1 = np.array([[0, 1, 2, 3], [4, 5, 6, 7]])
+    idx2 = np.array([[2, 3, 8, 9], [4, 5, 6, 7]])
+    mon.ingest_sync_stats({**base, "ul_idx": idx1}, t=0.0)
+    mon.ingest_sync_stats({**base, "ul_idx": idx2}, t=1.0)
+    s = reg.snapshot()["health.omega_overlap_ul"]["series"]
+    assert s["cluster=c0"] == 0.5 and s["cluster=c1"] == 1.0
+
+
+def test_counter_tracks_land_on_the_virtual_timeline():
+    tr = SpanTracer()
+    mon = HealthMonitor(registry=MetricsRegistry(), tracer=tr)
+    mon.ingest_loss(2.0, t=1.0)
+    mon.ingest_loss(1.5, t=2.0)
+    mon.ingest_round(np.array([True, False]), t=2.0)
+    obj = tr.to_chrome()
+    validate_trace(obj)
+    counters = [e for e in obj["traceEvents"] if e.get("ph") == "C"]
+    assert {e["name"] for e in counters} == {"health.loss",
+                                            "health.participation"}
+    assert all(e["pid"] == VIRTUAL_PID for e in counters)
+
+
+def test_ingest_round_and_cluster_round_count_consecutive_idle():
+    mon, _ = _monitor()
+    for _ in range(7):
+        mon.ingest_round(np.array([True, False, True]), t=0.0)
+    dead = [a for a in mon.anomalies if a["rule"] == "dead-cluster"]
+    assert [a["label"] for a in dead] == ["c1"]
+    # async variant: one cluster at a time, same rule
+    mon2, _ = _monitor()
+    for _ in range(7):
+        mon2.ingest_cluster_round(2, False, t=0.0)
+    mon2.ingest_cluster_round(0, True, t=0.0)
+    assert [a["label"] for a in mon2.anomalies] == ["c2"]
+
+
+def test_reset_run_clears_all_streaming_state():
+    mon, _ = _monitor()
+    for _ in range(7):
+        mon.ingest_round(np.array([False]), t=0.0)
+    assert mon.anomalies and mon._windows
+    mon.reset_run()
+    assert not mon.anomalies and not mon._windows and not mon._breached
+    assert mon.summary() == {"anomalies": 0, "by_rule": {}, "signals": []}
+
+
+def test_null_health_is_inert_shared_singleton():
+    assert NULL_HEALTH.enabled is False
+    NULL_HEALTH.observe("x", float("nan"), t=0.0)
+    NULL_HEALTH.ingest_round([False], t=0.0)
+    NULL_HEALTH.ingest_cluster_round(0, False, t=0.0)
+    NULL_HEALTH.ingest_loss(1.0, t=0.0)
+    assert NULL_HEALTH.anomalies == [] and NULL_HEALTH.summary() == {}
+
+
+# ---------------------------------------------------------------------------
+# Histogram quantiles (obs/metrics)
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_snapshot_quantiles_ordered_and_clamped():
+    reg = MetricsRegistry()
+    reg.histogram("lat").observe(np.arange(1.0, 101.0))
+    s = reg.snapshot()["lat"]["series"][""]
+    assert s["count"] == 100
+    assert s["min"] <= s["p50"] <= s["p95"] <= s["p99"] <= s["max"]
+    assert s["max"] == 100.0
+
+
+def test_histogram_quantiles_exact_on_degenerate_series():
+    reg = MetricsRegistry()
+    reg.histogram("lat").observe(np.full(10, 7.0), cluster="c0")
+    s = reg.snapshot()["lat"]["series"]["cluster=c0"]
+    # one distinct value: every quantile clamps to the observed range
+    assert s["p50"] == s["p95"] == s["p99"] == 7.0
+
+
+# ---------------------------------------------------------------------------
+# In-jit sync statistics (core/hfl collect_stats)
+# ---------------------------------------------------------------------------
+
+
+def test_collect_stats_unsupported_paths_raise():
+    hfl = HFLConfig(num_clusters=2, mus_per_cluster=2, period=2,
+                    sync_mode="sparse")
+    with pytest.raises(ValueError, match="leaf"):
+        make_sync_step(hfl, mesh=None, layout="leaf", collect_stats=True)
+
+
+def test_jit_sync_step_propagates_collect_stats_flag():
+    hfl = HFLConfig(num_clusters=2, mus_per_cluster=2, period=2,
+                    sync_mode="sparse")
+    on = jit_sync_step(make_sync_step(hfl, mesh=None, collect_stats=True))
+    off = jit_sync_step(make_sync_step(hfl, mesh=None))
+    assert on.collect_stats is True and off.collect_stats is False
+
+
+@pytest.mark.parametrize("mode", ["sparse", "dense"])
+def test_sync_stats_do_not_perturb_the_state(mode):
+    hfl = HFLConfig(num_clusters=2, mus_per_cluster=2, period=2,
+                    sync_mode=mode)
+    opt = SGDM(momentum=0.0)
+
+    def one(collect):
+        # fresh leaves per leg: the jitted sync donates the state, which
+        # deletes any buffer shared with the other leg's init
+        params = {"w": jnp.arange(8, dtype=jnp.float32)}
+        state = hfl_init(params, opt, hfl)
+        # perturb per-cluster replicas so drift/Ω are non-trivial
+        state = state._replace(params=jax.tree.map(
+            lambda p: p + jnp.arange(hfl.num_clusters, dtype=p.dtype)[
+                (...,) + (None,) * (p.ndim - 1)],
+            state.params))
+        sync = jit_sync_step(make_sync_step(hfl, mesh=None,
+                                            collect_stats=collect))
+        out = sync(state)
+        return out if collect else (out, None)
+
+    (s_on, stats), (s_off, _) = one(True), one(False)
+    np.testing.assert_array_equal(np.asarray(s_on.params["w"]),
+                                  np.asarray(s_off.params["w"]))
+    np.testing.assert_array_equal(np.asarray(s_on.w_ref["w"]),
+                                  np.asarray(s_off.w_ref["w"]))
+    assert stats["drift"].shape == (hfl.num_clusters,)
+    assert np.isfinite(float(stats["wref_norm"]))
+    if mode == "sparse":
+        assert "ul_idx" in stats
+    else:
+        assert "ul_idx" not in stats  # dense has no Ω index sets
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: real runs with --obs-health semantics
+# ---------------------------------------------------------------------------
+
+D = 12
+HEALTH = ObsConfig(health=True)
+
+
+def _quad_loss(params, batch):
+    return jnp.mean((params["w"][None, :] - batch) ** 2), {}
+
+
+def _run(name, *, obs=None, collect=False, accounting="analytic",
+         steps=None):
+    scn = get_scenario(name)
+    hfl = apply_hfl_overrides(scn, HFLConfig(
+        num_clusters=3, mus_per_cluster=2, period=2,
+        payload_accounting=accounting))
+    engine = build_engine(scn, hfl, seed=0, obs=obs,
+                          lp=LatencyParams(model_params=1e5))
+    params = {"w": jnp.zeros((D,), jnp.float32)}
+    opt = SGDM(momentum=0.0)
+    state = hfl_init(params, opt, hfl)
+    train = jax.jit(make_cluster_train_step(_quad_loss, opt, lambda t: 0.2))
+    sync = jit_sync_step(make_sync_step(hfl, mesh=None,
+                                        collect_stats=collect))
+    rng = np.random.default_rng(1)
+    N, B = hfl.num_clusters, hfl.mus_per_cluster * 2
+
+    def gen():
+        while True:
+            yield jnp.asarray(rng.normal(size=(N, B, D)).astype(np.float32))
+
+    steps = steps if steps is not None else 2 * hfl.period
+    state, trace = engine.run(state, train, sync, gen(), steps)
+    return engine, state, trace
+
+
+def test_lockstep_health_signals_and_fleet_gauges():
+    engine, _, _ = _run("stragglers", obs=HEALTH, collect=True, steps=8)
+    hs = engine.obs.health.summary()
+    for sig in ("drift", "eps_norm", "e_norm", "resid_ratio", "update_ratio",
+                "omega_overlap_ul", "idle_rounds", "loss", "payload_bits"):
+        assert sig in hs["signals"], sig
+    snap = engine.obs.registry.snapshot()
+    assert "cluster=c0" in snap["health.drift"]["series"]
+    part = snap["sim.participation_rate"]["series"]
+    assert set(part) == {"cluster=c0", "cluster=c1", "cluster=c2"}
+    assert all(0.0 <= v <= 1.0 for v in part.values())
+    assert snap["sim.drop_gini"]["series"][""] >= 0.0
+
+
+def test_async_health_per_cluster_stats_and_staleness():
+    engine, _, _ = _run("async", obs=HEALTH, steps=8)
+    hs = engine.obs.health.summary()
+    for sig in ("drift", "eps_norm", "resid_ratio", "staleness",
+                "idle_rounds", "loss", "payload_bits"):
+        assert sig in hs["signals"], sig
+    snap = engine.obs.registry.snapshot()
+    stale = snap["sim.staleness"]["series"]
+    assert stale and all(k.startswith("cluster=") for k in stale)
+    assert all({"p50", "p95", "p99"} <= set(v) for v in stale.values())
+
+
+@pytest.mark.parametrize("name", ["stragglers", "async"])
+def test_replay_bit_identical_health_on_vs_off(name):
+    """The acceptance criterion: the monitor only READS values the run
+    already produced — rows, meta and the final model are bitwise
+    unchanged by --obs-health (stats are extra read-only jit outputs)."""
+    e1, s1, t1 = _run(name, obs=HEALTH, collect=True, accounting="measured")
+    e2, s2, t2 = _run(name, obs=None, accounting="measured")
+    assert e1.obs.health.enabled and not e2.obs.health.enabled
+    assert t1.rows == t2.rows
+    assert t1.meta == t2.meta
+    np.testing.assert_array_equal(np.asarray(s1.params["w"]),
+                                  np.asarray(s2.params["w"]))
+
+
+def test_fault_dead_cluster_fires_matching_anomaly():
+    """The injected fault (scenario ``fault-dead-cluster`` masks cluster
+    2's MUs after the availability draw) must trip the dead-cluster rule
+    for exactly that cluster and skew the fleet-fairness gauges."""
+    engine, _, _ = _run("fault-dead-cluster", obs=HEALTH, collect=True,
+                        steps=16)
+    dead = [a for a in engine.obs.health.anomalies
+            if a["rule"] == "dead-cluster"]
+    assert dead and all(a["label"] == "c2" for a in dead)
+    snap = engine.obs.registry.snapshot()
+    part = snap["sim.participation_rate"]["series"]
+    assert part["cluster=c2"] == 0.0
+    assert any(v > 0.0 for k, v in part.items() if k != "cluster=c2")
+    assert snap["sim.drop_gini"]["series"][""] > 0.0
+    assert engine.obs.health.summary()["by_rule"]["dead-cluster"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the paper-fig3 CI smoke with --obs-health
+# ---------------------------------------------------------------------------
+
+
+def test_paper_fig3_obs_health_run_validates_end_to_end(tmp_path):
+    """One real driver run: every JSONL event kind validates against the
+    versioned schema, health counter tracks land in the Perfetto export,
+    the conservative default rules stay quiet on a healthy 4-step smoke,
+    and a tampered stream is rejected."""
+    from repro.launch.train import main
+
+    run = tmp_path / "run.jsonl"
+    trace = tmp_path / "trace.json"
+    main(["--scenario", "paper-fig3", "--steps", "4", "--clusters", "3",
+          "--mus", "2", "--period", "2", "--batch-per-mu", "1",
+          "--seq", "16", "--obs-health", "--trace-viz", str(trace),
+          "--metrics-out", str(run)])
+    assert validate_runlog(run) == []
+    recs = [json.loads(l) for l in run.read_text().splitlines()]
+    kinds = {r["event"] for r in recs}
+    assert {"config", "sim_summary", "health_summary", "metrics"} <= kinds
+    hs = next(r for r in recs if r["event"] == "health_summary")
+    assert hs["anomalies"] == 0  # a healthy CI smoke must not trip rules
+    assert hs["signals"], "health run emitted no signals"
+    obj = json.loads(trace.read_text())
+    validate_trace(obj)
+    tracks = {e["name"] for e in obj["traceEvents"] if e.get("ph") == "C"}
+    assert {"health.drift", "health.residual", "health.loss",
+            "health.participation"} <= tracks
+    # tampering with the stream is caught by the validator
+    lines = run.read_text().splitlines()
+    bad = json.loads(lines[0])
+    bad["schema"] = 99
+    tampered = tmp_path / "tampered.jsonl"
+    tampered.write_text("\n".join([json.dumps(bad)] + lines[1:]) + "\n")
+    errs = validate_runlog(tampered)
+    assert errs and "schema version" in errs[0]
+    # ... and counts as a gated schema violation in run_compare
+    sv = run_compare.summarize(str(tampered))["schema_violations"]
+    assert sv == 1
+
+
+# ---------------------------------------------------------------------------
+# tools/run_compare.py: regression attribution
+# ---------------------------------------------------------------------------
+
+
+def _synth_run(path, *, bits=1000.0, anomalies=0, loss=2.0, gini=0.0,
+               launches=8):
+    dead = {"dead-cluster": anomalies} if anomalies else {}
+    recs = [
+        {"schema": 1, "event": "config", "t_host_s": 0.0, "arch": "tiny",
+         "clusters": 3, "mus_per_cluster": 2, "period": 2, "sync": "sparse",
+         "layout": "flat", "omega": 0.01, "payload_accounting": "measured",
+         "scenario": "paper-fig3", "steps": 4, "seq": 16, "batch_per_mu": 1},
+        {"schema": 1, "event": "sim_summary", "t_host_s": 0.1,
+         "discipline": "lockstep", "residency": "none",
+         "train_launches": launches, "sync_launches": 2,
+         "bits_access_total": bits, "bits_fronthaul_total": bits / 2,
+         "t_hfl_period_s": 0.5},
+        {"schema": 1, "event": "eval", "t_host_s": 0.2, "eval_loss": loss},
+        {"schema": 1, "event": "timing", "t_host_s": 0.2, "steps": 4,
+         "compile_s": 1.0},
+        {"schema": 1, "event": "health_summary", "t_host_s": 0.3,
+         "anomalies": anomalies, "by_rule": dead},
+        {"schema": 1, "event": "metrics", "t_host_s": 0.3, "metrics": {
+            "sim.bits_access": {"series": {"": bits}},
+            "sim.participation_rate": {"series": {
+                "cluster=c0": 1.0,
+                "cluster=c2": 0.0 if anomalies else 1.0}},
+            "sim.drop_gini": {"series": {"": gini}},
+            "health.anomalies": {"series": (
+                {"cluster=c2,rule=dead-cluster": float(anomalies)}
+                if anomalies else {})},
+        }},
+    ]
+    path.write_text("".join(json.dumps(r) + "\n" for r in recs))
+    return path
+
+
+def test_run_compare_summarize_extracts_the_gated_surface(tmp_path):
+    s = run_compare.summarize(str(_synth_run(tmp_path / "a.jsonl")))
+    assert s["run_compare_summary"] == 1
+    assert s["config"]["scenario"] == "paper-fig3"
+    assert s["sim_exact"]["train_launches"] == 8
+    assert s["sim_float"]["bits_access_total"] == 1000.0
+    assert s["health"] == {"anomalies": 0, "by_rule": {}}
+    assert s["metrics_float"]["sim.drop_gini"] == {"": 0.0}
+    assert s["event_counts"]["metrics"] == 1
+    assert s["schema_violations"] == 0
+    assert s["info"]["eval_loss"] == 2.0 and s["info"]["compile_s"] == 1.0
+
+
+def test_run_compare_float_tolerance_and_info_demotion(tmp_path):
+    a = run_compare.summarize(str(_synth_run(tmp_path / "a.jsonl")))
+    b = run_compare.summarize(str(_synth_run(
+        tmp_path / "b.jsonl", bits=1000.0 * (1 + 1e-9), loss=9.0)))
+    rep = run_compare.compare(a, b, 1e-6)
+    # bits within rtol: clean; the loss shift is informational only
+    assert rep["gated"] == []
+    assert [p for p, _, _ in rep["info"]] == ["info.eval_loss"]
+    # past the tolerance the bit totals gate
+    c = run_compare.summarize(str(_synth_run(tmp_path / "c.jsonl",
+                                             bits=1001.0)))
+    rep = run_compare.compare(a, c, 1e-6)
+    assert any(p.endswith("bits_access_total") for p, _, _ in rep["gated"])
+
+
+def test_run_compare_check_distinguishes_fault_from_healthy(tmp_path,
+                                                            capsys):
+    a = _synth_run(tmp_path / "healthy.jsonl")
+    f = _synth_run(tmp_path / "fault.jsonl", anomalies=1, gini=0.14)
+    assert run_compare.main([str(a), str(a), "--check"]) == 0
+    assert run_compare.main([str(a), str(f), "--check"]) == 1
+    out = capsys.readouterr().out
+    assert "health.anomalies" in out and "drop_gini" in out
+    # unreadable input is a distinct failure class
+    assert run_compare.main([str(a), str(tmp_path / "nope.jsonl"),
+                             "--check"]) == 2
+
+
+def test_run_compare_exact_gates_catch_config_and_launch_drift(tmp_path):
+    a = run_compare.summarize(str(_synth_run(tmp_path / "a.jsonl")))
+    b = run_compare.summarize(str(_synth_run(tmp_path / "b.jsonl",
+                                             launches=9)))
+    rep = run_compare.compare(a, b, 1e-6)
+    assert ("sim_exact.train_launches", 8, 9) in rep["gated"]
+
+
+def test_run_compare_golden_summary_round_trip(tmp_path):
+    a = _synth_run(tmp_path / "a.jsonl")
+    golden = tmp_path / "golden.json"
+    assert run_compare.main(["--summarize", str(a), "-o", str(golden)]) == 0
+    # a blessed summary compares clean against the run it came from
+    assert run_compare.main([str(golden), str(a), "--check"]) == 0
+    # an unknown summary version is rejected, not silently compared
+    obj = json.loads(golden.read_text())
+    obj["run_compare_summary"] = 99
+    golden.write_text(json.dumps(obj, indent=1))
+    assert run_compare.main([str(golden), str(a), "--check"]) == 2
+
+
+def test_run_compare_report_output(tmp_path):
+    a = _synth_run(tmp_path / "a.jsonl")
+    f = _synth_run(tmp_path / "f.jsonl", anomalies=1)
+    rep = tmp_path / "report.json"
+    assert run_compare.main([str(a), str(f), "--out", str(rep)]) == 0
+    obj = json.loads(rep.read_text())  # report written even without --check
+    assert obj["gated"] and obj["rtol"] == 1e-6
+
+
+def test_run_compare_is_stdlib_standalone(tmp_path):
+    """The CLI must work with no repro install: run it in a subprocess
+    with PYTHONPATH scrubbed."""
+    a = _synth_run(tmp_path / "a.jsonl")
+    env = {k: v for k, v in os.environ.items() if k != "PYTHONPATH"}
+    r = subprocess.run(
+        [sys.executable, str(TOOLS / "run_compare.py"), str(a), str(a),
+         "--check"], capture_output=True, text=True, env=env)
+    assert r.returncode == 0, r.stderr
+    assert "0 gated difference(s)" in r.stdout

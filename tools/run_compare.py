@@ -1,0 +1,242 @@
+#!/usr/bin/env python3
+"""Run-to-run regression attribution over ``--metrics-out`` JSONL runs.
+
+Stdlib-only on purpose: point it at two run logs from any machines, no
+repro install needed.
+
+  python tools/run_compare.py base.jsonl fresh.jsonl           # report
+  python tools/run_compare.py base.jsonl fresh.jsonl --check   # CI gate
+  python tools/run_compare.py --summarize run.jsonl -o golden.json
+
+Each input is either a raw ``--metrics-out`` JSONL stream or a summary
+JSON previously written by ``--summarize`` (detected by the
+``run_compare_summary`` marker) — so CI can bless a small golden summary
+instead of a whole run log.
+
+What is compared, and how, is deliberately split by host-dependence:
+
+  * GATED EXACT — config echo, per-kind event counts, schema-violation
+    count, launch counts, health anomaly counts (total and by rule).
+    These are functions of (scenario, seed, flags) alone; any drift is a
+    real behavioural change.
+  * GATED FLOAT (relative tolerance, default 1e-6) — virtual-clock
+    metrics: payload bit totals, per-cluster participation rates, the
+    drop-fairness Gini, simulator latency aggregates. Deterministic on
+    the virtual clock, tolerance only for JSON round-tripping.
+  * INFORMATIONAL — losses and host timings (compile_s, s/step).
+    XLA-CPU losses shift across hosts/BLAS builds, so these never gate;
+    they are printed for attribution once a gated metric trips.
+
+``--check`` exits 1 when any gated comparison differs (and says which),
+2 on unreadable/invalid input, 0 otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+SUMMARY_MARKER = "run_compare_summary"
+SUMMARY_VERSION = 1
+
+# config fields echoed into the summary (gated exact)
+_CONFIG_KEYS = ("arch", "clusters", "mus_per_cluster", "period", "sync",
+                "layout", "omega", "payload_accounting", "scenario",
+                "steps", "seq", "batch_per_mu")
+# sim_summary fields that are virtual-clock deterministic (gated float)
+_SIM_FLOAT_KEYS = ("bits_access_total", "bits_fronthaul_total",
+                   "bits_mu_ul", "bits_sbs_dl", "bits_sbs_ul", "bits_mbs_dl",
+                   "t_fl_iter_s", "t_hfl_iter_s", "t_hfl_period_s")
+# sim_summary fields gated exactly (integer-valued)
+_SIM_EXACT_KEYS = ("discipline", "residency", "train_launches",
+                   "sync_launches")
+# final-registry metrics pulled into the summary: exact (counter-like)
+_METRIC_EXACT = ("sim.train_launches", "sim.sync_launches",
+                 "health.anomalies")
+# ... and float (virtual-clock gauges/counters)
+_METRIC_FLOAT = ("sim.bits_access", "sim.bits_fronthaul",
+                 "sim.participation_rate", "sim.drop_gini")
+
+
+def _validate_line(rec) -> bool:
+    """Minimal stdlib re-statement of ``repro.obs.runlog.validate_event``:
+    envelope only (the full per-kind field tables live in the package)."""
+    if not isinstance(rec, dict) or rec.get("schema") != 1:
+        return False
+    if not isinstance(rec.get("event"), str):
+        return False
+    t = rec.get("t_host_s")
+    return isinstance(t, (int, float)) and not isinstance(t, bool) and t >= 0
+
+
+def summarize(path: str) -> dict:
+    """Extract the comparable summary of one run JSONL (or pass a summary
+    JSON through unchanged)."""
+    # a blessed summary is ONE pretty-printed JSON object spanning the
+    # whole file; a run log is one object per line — try the former first
+    with open(path) as f:
+        text = f.read()
+    if SUMMARY_MARKER in text:
+        try:
+            obj = json.loads(text)
+        except json.JSONDecodeError:
+            obj = None
+        if isinstance(obj, dict) and SUMMARY_MARKER in obj:
+            if obj.get(SUMMARY_MARKER) != SUMMARY_VERSION:
+                raise ValueError(f"{path}: unsupported summary version "
+                                 f"{obj.get(SUMMARY_MARKER)!r}")
+            return obj
+
+    counts: dict = {}
+    bad = 0
+    out = {SUMMARY_MARKER: SUMMARY_VERSION, "source": path,
+           "config": {}, "sim_exact": {}, "sim_float": {},
+           "health": {}, "metrics_exact": {}, "metrics_float": {},
+           "info": {}}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                bad += 1
+                continue
+            if not _validate_line(rec):
+                bad += 1
+                continue
+            ev = rec["event"]
+            counts[ev] = counts.get(ev, 0) + 1
+            if ev == "config":
+                out["config"] = {k: rec.get(k) for k in _CONFIG_KEYS}
+            elif ev == "sim_summary":
+                out["sim_exact"] = {k: rec.get(k) for k in _SIM_EXACT_KEYS
+                                    if k in rec}
+                out["sim_float"] = {k: float(rec[k]) for k in _SIM_FLOAT_KEYS
+                                    if rec.get(k) is not None}
+            elif ev == "health_summary":
+                out["health"] = {"anomalies": rec.get("anomalies"),
+                                 "by_rule": rec.get("by_rule", {})}
+            elif ev == "eval":
+                for k in ("first_loss", "last_loss", "eval_loss"):
+                    if k in rec:
+                        out["info"][k] = rec[k]
+            elif ev == "timing":
+                for k in ("compile_s", "steady_s_per_step"):
+                    if rec.get(k) is not None:
+                        out["info"][k] = rec[k]
+            elif ev == "metrics":
+                m = rec.get("metrics", {})
+                for k in _METRIC_EXACT:
+                    if k in m:
+                        out["metrics_exact"][k] = m[k].get("series", {})
+                for k in _METRIC_FLOAT:
+                    if k in m:
+                        out["metrics_float"][k] = m[k].get("series", {})
+    out["event_counts"] = counts
+    out["schema_violations"] = bad
+    return out
+
+
+def _flat(prefix: str, obj) -> dict:
+    """Flatten nested dicts to dotted paths for uniform comparison."""
+    if not isinstance(obj, dict):
+        return {prefix: obj}
+    out = {}
+    for k in sorted(obj):
+        p = f"{prefix}.{k}" if prefix else str(k)
+        out.update(_flat(p, obj[k]))
+    return out
+
+
+def _close(a, b, rtol: float) -> bool:
+    try:
+        fa, fb = float(a), float(b)
+    except (TypeError, ValueError):
+        return a == b
+    if fa == fb:
+        return True
+    return abs(fa - fb) <= rtol * max(abs(fa), abs(fb))
+
+
+def compare(base: dict, fresh: dict, rtol: float) -> dict:
+    """-> {"gated": [diff...], "info": [diff...]} where each diff is
+    (path, base_value, fresh_value)."""
+    gated, info = [], []
+
+    def walk(section: str, exact: bool, sink: list):
+        fb = _flat(section, base.get(section, {}))
+        ff = _flat(section, fresh.get(section, {}))
+        for path in sorted(set(fb) | set(ff)):
+            a, b = fb.get(path), ff.get(path)
+            same = (a == b) if exact else _close(a, b, rtol)
+            if not same:
+                sink.append((path, a, b))
+
+    walk("config", True, gated)
+    walk("event_counts", True, gated)
+    walk("schema_violations", True, gated)
+    walk("sim_exact", True, gated)
+    walk("health", True, gated)
+    walk("metrics_exact", True, gated)
+    walk("sim_float", False, gated)
+    walk("metrics_float", False, gated)
+    walk("info", False, info)
+    return {"gated": gated, "info": info}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two --metrics-out runs (or blessed summaries)")
+    ap.add_argument("base", nargs="?", help="baseline run JSONL or summary")
+    ap.add_argument("fresh", nargs="?", help="fresh run JSONL or summary")
+    ap.add_argument("--summarize", metavar="RUN",
+                    help="extract a blessable summary instead of comparing")
+    ap.add_argument("-o", "--out", default=None,
+                    help="write the summary/report JSON here")
+    ap.add_argument("--rtol", type=float, default=1e-6,
+                    help="relative tolerance for gated float metrics")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 when any gated metric differs")
+    args = ap.parse_args(argv)
+
+    try:
+        if args.summarize:
+            s = summarize(args.summarize)
+            text = json.dumps(s, indent=1, sort_keys=True)
+            if args.out:
+                with open(args.out, "w") as f:
+                    f.write(text + "\n")
+                print(f"[run_compare] summary -> {args.out}")
+            else:
+                print(text)
+            return 0
+        if not args.base or not args.fresh:
+            ap.error("need BASE and FRESH (or --summarize RUN)")
+        b, f_ = summarize(args.base), summarize(args.fresh)
+    except (OSError, ValueError) as e:
+        print(f"[run_compare] ERROR: {e}", file=sys.stderr)
+        return 2
+
+    rep = compare(b, f_, args.rtol)
+    for path, a, v in rep["gated"]:
+        print(f"DIFF  {path}: {a!r} -> {v!r}")
+    for path, a, v in rep["info"]:
+        print(f"info  {path}: {a!r} -> {v!r}")
+    n = len(rep["gated"])
+    print(f"[run_compare] {n} gated difference(s), "
+          f"{len(rep['info'])} informational, rtol={args.rtol:g}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"base": b.get("source", args.base),
+                       "fresh": f_.get("source", args.fresh),
+                       "rtol": args.rtol,
+                       "gated": rep["gated"], "info": rep["info"]},
+                      f, indent=1)
+        print(f"[run_compare] report -> {args.out}")
+    return 1 if (args.check and n) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
