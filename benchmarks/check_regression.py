@@ -77,6 +77,10 @@ GATED_PARENT_RES = (
 # informational.
 GATED_LARGER_KEY_RES = (
     r"^pricing_speedup_100k$",
+    # client selection: full-participation / selected access-UL bits —
+    # deterministic analytic accounting on both sides, so a drop means
+    # the selector stopped capping participants, not host noise
+    r"^access_ul_reduction_prate$",
 )
 
 # ABSOLUTE-floor gates, checked against the FRESH artifact only: same-run

@@ -107,15 +107,15 @@ def _omega_fidelity(state, hfl):
     wref, spec = fl.pack(state.w_ref)
     wn, _ = fl.pack_stacked(state.params)
     s0 = wn[0] - wref
-    k = sp.keep_count(spec.total, hfl.phi_sbs_ul)
+    k = sp.keep_count(spec.total, hfl.tiers[1].phi_up)
     _, exact_idx = sp.pack_topk(s0, k)
     exact = set(np.asarray(exact_idx).tolist())
-    _, fused_idx = sp.pack_phi(s0, hfl.phi_sbs_ul, impl="fused")
+    _, fused_idx = sp.pack_phi(s0, hfl.tiers[1].phi_up, impl="fused")
     fused_identical = exact == set(np.asarray(fused_idx).tolist())
     leaf_sel = []
     for i in range(len(spec.sizes)):
         sl = spec.leaf_slice(i)
-        kk = sp.keep_count(spec.sizes[i], hfl.phi_sbs_ul)
+        kk = sp.keep_count(spec.sizes[i], hfl.tiers[1].phi_up)
         _, li = sp.pack_topk(s0[sl], kk)
         leaf_sel.extend((np.asarray(li) + sl.start).tolist())
     leaf = len(exact & set(leaf_sel)) / k

@@ -27,7 +27,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import HFLConfig, ModelConfig
-from repro.core.hfl import hfl_init, jit_sync_step, make_cluster_train_step, make_sync_step
+from repro.core.hfl import (
+    SyncPlan, hfl_init, jit_sync_step, make_cluster_train_step, make_sync,
+)
 from repro.launch.steps import make_loss_fn
 from repro.models.transformer import init_model
 from repro.optim import SGDM
@@ -38,7 +40,8 @@ from repro.wireless.latency import LatencyParams
 from repro.wireless.qam import optimal_rate_per_subcarrier, optimal_rate_vec
 from repro.wireless.topology import HCNTopology, uniform_disk
 
-TRAIN_SCENARIOS = ("paper-fig3", "stragglers", "mobility", "dropout", "async")
+TRAIN_SCENARIOS = ("paper-fig3", "stragglers", "mobility", "dropout",
+                   "async", "hier-3tier", "prate-biased")
 
 
 def _tiny_cfg():
@@ -61,7 +64,7 @@ def run(periods: int = 2, seed: int = 0):
         engine = build_engine(scn, hfl, seed=seed)
         state = hfl_init(init_model(jax.random.PRNGKey(seed), cfg), opt, hfl)
         train = jax.jit(make_cluster_train_step(loss_fn, opt, lambda t: 0.1))
-        sync = jit_sync_step(make_sync_step(hfl, mesh=None))
+        sync = jit_sync_step(make_sync(SyncPlan.from_config(hfl)))
         rng = np.random.default_rng(seed)
         N, B = hfl.num_clusters, hfl.mus_per_cluster * 2
 
@@ -70,7 +73,7 @@ def run(periods: int = 2, seed: int = 0):
                 toks = rng.integers(0, cfg.vocab_size, (N, B, 16))
                 yield {"tokens": jnp.asarray(toks)}
 
-        steps = periods * hfl.period
+        steps = periods * hfl.tiers[1].period
         _, trace = engine.run(state, train, sync, batches(), steps)
         m = trace.meta
         # divide by H-periods, not sync launches: under async each period
@@ -87,12 +90,56 @@ def run(periods: int = 2, seed: int = 0):
             "t_hfl_period_s": m.get("t_hfl_period_s"),
             "final_loss": trace.losses()[-1][1] if trace.losses() else None,
         }))
+    rows.append(("prate-selection", run_prate_selection(cfg, loss_fn, opt,
+                                                        seed=seed)))
     stats = run_scale_sampling(SCENARIOS["scale-100k"], lp=LatencyParams())
     rows.append(("scale-100k", {k: v for k, v in stats.items() if k != "scenario"}))
     rows.append(("scale-1m", run_scale_1m(cfg, loss_fn, opt, seed=seed)))
     rows.append(("pricing-100k", run_pricing_sweep(seed=seed)))
     rows.append(("tracing-overhead", run_tracing_overhead(seed=seed)))
     return rows
+
+
+def run_prate_selection(cfg, loss_fn, opt, periods: int = 2, seed: int = 0):
+    """Client-selection traffic leg: the ``prate-biased`` scenario vs its
+    full-participation twin (same layout, φ, seed — only the selector
+    differs). Both bits totals are deterministic analytic accounting;
+    ``access_ul_reduction_prate`` (full / selected, larger is better) is
+    the gated headline: rate-biased prate=0.5 must keep cutting access-
+    uplink traffic. Fronthaul bits are participation-independent and stay
+    equal by construction."""
+    import dataclasses
+
+    scn = SCENARIOS["prate-biased"]
+    hfl = apply_hfl_overrides(scn, HFLConfig())
+    full = dataclasses.replace(scn, sim=dataclasses.replace(
+        scn.sim, prate=1.0, selection="uniform"))
+    train = jax.jit(make_cluster_train_step(loss_fn, opt, lambda t: 0.1))
+    sync = jit_sync_step(make_sync(SyncPlan.from_config(hfl)))
+
+    def leg(s):
+        engine = build_engine(s, hfl, seed=seed)
+        state = hfl_init(init_model(jax.random.PRNGKey(seed), cfg), opt, hfl)
+        rng = np.random.default_rng(seed)
+        N, B = hfl.num_clusters, hfl.mus_per_cluster * 2
+
+        def batches():
+            while True:
+                toks = rng.integers(0, cfg.vocab_size, (N, B, 16))
+                yield {"tokens": jnp.asarray(toks)}
+
+        _, trace = engine.run(state, train, sync, batches(),
+                              periods * hfl.tiers[1].period)
+        return trace.meta
+
+    sel, ful = leg(scn), leg(full)
+    return {
+        "bits_access_selected": sel["bits_access_total"],
+        "bits_access_full": ful["bits_access_total"],
+        "access_ul_reduction_prate":
+            ful["bits_access_total"] / sel["bits_access_total"],
+        "bits_fronthaul_total": sel["bits_fronthaul_total"],
+    }
 
 
 def run_tracing_overhead(periods: int = 2, seed: int = 0):
@@ -118,7 +165,7 @@ def run_tracing_overhead(periods: int = 2, seed: int = 0):
         scn, HFLConfig(num_clusters=4, mus_per_cluster=3, period=4)
     )
     train = jax.jit(make_cluster_train_step(loss_fn, opt, lambda t: 0.1))
-    sync = jit_sync_step(make_sync_step(hfl, mesh=None))
+    sync = jit_sync_step(make_sync(SyncPlan.from_config(hfl)))
 
     def leg(obs):
         engine = build_engine(scn, hfl, seed=seed, obs=obs)
@@ -133,7 +180,7 @@ def run_tracing_overhead(periods: int = 2, seed: int = 0):
 
         t0 = time.perf_counter()
         _, trace = engine.run(state, train, sync, batches(),
-                              periods * hfl.period)
+                              periods * hfl.tiers[1].period)
         return len(trace.rows), time.perf_counter() - t0
 
     leg(None)  # warm the jitted steps so neither timed leg pays compile
@@ -168,7 +215,7 @@ def run_scale_1m(cfg, loss_fn, opt, periods: int = 2, seed: int = 0):
                           seed=seed)
     state = hfl_init(init_model(jax.random.PRNGKey(seed), cfg), opt, hfl)
     train = jax.jit(make_cluster_train_step(loss_fn, opt, lambda t: 0.1))
-    sync = jit_sync_step(make_sync_step(hfl, mesh=None))
+    sync = jit_sync_step(make_sync(SyncPlan.from_config(hfl)))
     rng = np.random.default_rng(seed)
     N, B = hfl.num_clusters, hfl.mus_per_cluster * 2
 
@@ -178,7 +225,7 @@ def run_scale_1m(cfg, loss_fn, opt, periods: int = 2, seed: int = 0):
             yield {"tokens": jnp.asarray(toks)}
 
     t0 = time.perf_counter()
-    _, trace = engine.run(state, train, sync, batches(), periods * hfl.period)
+    _, trace = engine.run(state, train, sync, batches(), periods * hfl.tiers[1].period)
     host_s = time.perf_counter() - t0
     events = len(trace.rows)
     m = trace.meta

@@ -9,8 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.configs.base import HFLConfig
-from repro.core.hfl import hfl_init, make_cluster_train_step, make_sync_step
+from repro.configs.base import HFLConfig, TierConfig
+from repro.core.hfl import SyncPlan, hfl_init, make_cluster_train_step, make_sync
 from repro.core.schedule import run_hfl
 from repro.data import SyntheticLM
 from repro.launch.steps import make_loss_fn
@@ -18,15 +18,20 @@ from repro.models.transformer import init_model
 from repro.optim import SGDM, constant_lr
 
 cfg = get_config("olmo-1b").reduced()
-hfl = HFLConfig(num_clusters=4, mus_per_cluster=2, period=4, sync_mode="sparse",
-                phi_sbs_ul=0.9, phi_mbs_dl=0.9)
+# one TierConfig per aggregation stage, bottom-up: 2 MUs per SBS,
+# 4 SBS clusters syncing sparsely every 4 iterations
+hfl = HFLConfig(tiers=(
+    TierConfig(fanout=2, phi_up=0.99, phi_down=0.9),
+    TierConfig(fanout=4, period=4, phi_up=0.9, phi_down=0.9,
+               beta_up=0.5, beta_down=0.2),
+), sync_mode="sparse")
 
 params = init_model(jax.random.PRNGKey(0), cfg)
 opt = SGDM(momentum=0.9)
 state = hfl_init(params, opt, hfl)
 
 train_step = jax.jit(make_cluster_train_step(make_loss_fn(cfg), opt, constant_lr(0.1)))
-sync_step = jax.jit(make_sync_step(hfl, mesh=None))
+sync_step = jax.jit(make_sync(SyncPlan.from_config(hfl)))
 
 lm = SyntheticLM(cfg.vocab_size)
 rng = np.random.default_rng(0)
@@ -40,7 +45,7 @@ def batches():
 
 
 state = run_hfl(
-    state, train_step, sync_step, batches(), hfl.period, num_steps=60,
+    state, train_step, sync_step, batches(), hfl.tiers[1].period, num_steps=60,
     on_step=lambda t, s, l: losses.append(float(l.mean())),
 )
 print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f}")

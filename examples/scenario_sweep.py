@@ -16,7 +16,9 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import HFLConfig
-from repro.core.hfl import hfl_init, jit_sync_step, make_cluster_train_step, make_sync_step
+from repro.core.hfl import (
+    SyncPlan, hfl_init, jit_sync_step, make_cluster_train_step, make_sync,
+)
 from repro.data import SyntheticLM
 from repro.launch.steps import make_loss_fn
 from repro.models.transformer import init_model
@@ -51,7 +53,7 @@ def main():
         engine = build_engine(scn, hfl, seed=args.seed)
         state = hfl_init(init_model(jax.random.PRNGKey(args.seed), cfg), opt, hfl)
         train = jax.jit(make_cluster_train_step(loss_fn, opt, constant_lr(0.1)))
-        sync = jit_sync_step(make_sync_step(hfl, mesh=None))
+        sync = jit_sync_step(make_sync(SyncPlan.from_config(hfl)))
         rng = np.random.default_rng(args.seed)
         N, B = hfl.num_clusters, hfl.mus_per_cluster * 2
 
@@ -61,7 +63,7 @@ def main():
                 yield {"tokens": jnp.asarray(toks.reshape(N, B, 32))}
 
         _, trace = engine.run(state, train, sync, batches(),
-                              args.periods * hfl.period)
+                              args.periods * hfl.tiers[1].period)
         m = trace.meta
         loss = trace.losses()[-1][1]
         print(f"{name:<12} {m['discipline']:<9} {trace.wallclock:>9.2f}s "

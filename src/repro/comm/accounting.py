@@ -168,17 +168,17 @@ def make_sync_probe(hfl_cfg, codec: "str | Codec"):
         eps, _ = fl.pack_stacked(state.eps)
         Q = ref_spec.total
 
-        s = wn - wref[None, :] + hfl_cfg.beta_s * eps  # [N, Q]
+        s = wn - wref[None, :] + hfl_cfg.tiers[1].beta_up * eps  # [N, Q]
         ul_bits, sents = [], []
         for n in range(N):
-            vals, idx = sp.pack_phi(s[n], hfl_cfg.phi_sbs_ul, impl=impl)
+            vals, idx = sp.pack_phi(s[n], hfl_cfg.tiers[1].phi_up, impl=impl)
             if wire:
                 vals = _wire_round(vals, wire)
             ul_bits.append(codec.measure_bits_jax(vals, idx, Q))
             sents.append(sp.unpack_topk(vals, idx, Q))
 
-        delta = sum(sents) / N + hfl_cfg.beta_m * e
-        dvals, didx = sp.pack_phi(delta, hfl_cfg.phi_mbs_dl, impl=impl)
+        delta = sum(sents) / N + hfl_cfg.tiers[1].beta_down * e
+        dvals, didx = sp.pack_phi(delta, hfl_cfg.tiers[1].phi_down, impl=impl)
         dl_bits = codec.measure_bits_jax(dvals, didx, Q)
         return jnp.stack(ul_bits), dl_bits
 

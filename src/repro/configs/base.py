@@ -7,8 +7,10 @@ can be embedded in jit static args.
 from __future__ import annotations
 
 import dataclasses
+import math
+import warnings
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 from repro.obs.config import ObsConfig
 
@@ -166,20 +168,177 @@ INPUT_SHAPES = {
 
 
 @dataclass(frozen=True)
-class HFLConfig:
-    """Hierarchical FL + sparse communication parameters (paper §III-IV)."""
+class TierConfig:
+    """One aggregation stage of the hierarchy, bottom-up.
 
-    num_clusters: int = 1  # N (pods)
-    mus_per_cluster: int = 4  # data-parallel shards inside a pod
-    period: int = 4  # H: intra-cluster steps between global syncs
-    # sparsification fractions phi: fraction of entries NOT sent (paper's phi)
-    phi_mu_ul: float = 0.99
-    phi_sbs_dl: float = 0.9
-    phi_sbs_ul: float = 0.9
-    phi_mbs_dl: float = 0.9
+    ``tiers[0]`` is the MU↔SBS stage (fan-out = MUs per first-level
+    aggregator; its intra-cluster averaging runs every local step, so
+    ``period`` is 1 by convention). ``tiers[t]`` for t >= 1 is the stage
+    that merges ``fanout`` tier-(t-1) aggregators into one tier-t
+    aggregator every ``period`` tier-(t-1) rounds; ``tiers[-1]`` is the
+    root (MBS / cloud). The paper's two-level MU→SBS→MBS tree is the
+    depth-2 special case.
+    """
+
+    fanout: int  # children per tier-t aggregator
+    period: int = 1  # tier-(t-1) rounds between tier-t syncs
+    # sparsification fractions phi: fraction of entries NOT sent
+    phi_up: float = 0.0  # child -> aggregator uplink
+    phi_down: float = 0.0  # aggregator -> child downlink
+    beta_up: float = 0.0  # discounted error feedback on the uplink drift
+    beta_down: float = 0.0  # discounted error feedback on the downlink delta
+    # lockstep (barrier) | deadline (straggler drop) | async (own clocks);
+    # mixable across tiers — e.g. lockstep edges under an async root
+    discipline: str = "lockstep"
+
+    def __post_init__(self):
+        if self.fanout < 1:
+            raise ValueError(f"TierConfig.fanout must be >= 1, got {self.fanout}")
+        if self.period < 1:
+            raise ValueError(f"TierConfig.period must be >= 1, got {self.period}")
+        for nm in ("phi_up", "phi_down"):
+            v = getattr(self, nm)
+            if not 0.0 <= v < 1.0:
+                raise ValueError(f"TierConfig.{nm} must be in [0, 1), got {v}")
+        if self.discipline not in ("lockstep", "deadline", "async"):
+            raise ValueError(f"unknown tier discipline {self.discipline!r}")
+
+
+# legacy scalar HFLConfig fields -> their depth-2 tier slot; both the
+# constructor shim and the deprecated read-properties are driven off this
+_LEGACY_HFL_FIELDS = (
+    "num_clusters", "mus_per_cluster", "period",
+    "phi_mu_ul", "phi_sbs_dl", "phi_sbs_ul", "phi_mbs_dl",
+    "beta_s", "beta_m",
+)
+
+# warn-once-per-process registry for the deprecated field reads (same
+# mechanism as the LatencyParams.index_bits deprecation)
+_legacy_hfl_warned: set = set()
+
+
+def _warn_legacy_hfl_field(name: str, hint: str) -> None:
+    if name in _legacy_hfl_warned:
+        return
+    _legacy_hfl_warned.add(name)
+    warnings.warn(
+        f"HFLConfig.{name} is deprecated; {hint} (the scalar two-level "
+        "fields were replaced by the per-tier HFLConfig.tiers tuple)",
+        DeprecationWarning, stacklevel=3,
+    )
+
+
+def _reset_legacy_hfl_warnings() -> None:
+    """Test hook: re-arm the once-per-process deprecation warnings."""
+    _legacy_hfl_warned.clear()
+
+
+def warn_legacy_cli_flag(flag: str, replacement: str) -> None:
+    """Once-per-process deprecation for the old CLI surface
+    (``--clusters/--mus/--period`` -> ``--tiers``); shares the warned-set
+    (and the test reset hook) with the field shims."""
+    key = f"cli:{flag}"
+    if key in _legacy_hfl_warned:
+        return
+    _legacy_hfl_warned.add(key)
+    warnings.warn(
+        f"{flag} is deprecated; use {replacement} instead",
+        DeprecationWarning, stacklevel=3,
+    )
+
+
+# the old HFLConfig() defaults, expressed as the depth-2 tier tuple
+DEFAULT_TIERS = (
+    TierConfig(fanout=4, period=1, phi_up=0.99, phi_down=0.9),
+    TierConfig(fanout=1, period=4, phi_up=0.9, phi_down=0.9,
+               beta_up=0.5, beta_down=0.2),
+)
+
+
+def parse_tiers_spec(spec: str) -> "Tuple[TierConfig, ...]":
+    """``--tiers`` grammar -> the per-tier tuple.
+
+    ``FANOUTS[:H=PERIODS][:async]`` where
+
+      * ``FANOUTS`` — ``x``-separated fan-outs listed ROOT-DOWN: the first
+        number is the root's child count, the last is MUs per lowest
+        aggregator. ``4x2`` = 4 clusters x 2 MUs (the old
+        ``--clusters 4 --mus 2``); ``2x4x2`` adds an edge tier above 4-SBS
+        groups of 2 MUs each.
+      * ``H=PERIODS`` — comma-separated aggregation periods listed
+        BOTTOM-UP (tier 1 upward, each counted in rounds of the tier
+        below). ``H=4`` = consensus every 4 iterations (the old
+        ``--period 4``); ``H=4,2`` adds a root boundary every 2 tier-1
+        rounds. Omitted tiers default to period 1.
+      * ``async`` — mark the ROOT tier's discipline async (mixed
+        hierarchy: lockstep below, clock-free root exchange).
+
+    Sparsification/error-feedback default to the historical per-level
+    values: the MU tier at ``phi=(0.99, 0.9)``, every aggregation tier at
+    ``phi=(0.9, 0.9)``, ``beta=(0.5, 0.2)``.
+    """
+    parts = [p for p in spec.strip().split(":") if p]
+    if not parts:
+        raise ValueError(f"empty --tiers spec {spec!r}")
+    try:
+        fan_rd = [int(f) for f in parts[0].split("x")]
+    except ValueError:
+        raise ValueError(
+            f"--tiers fan-outs must be integers, got {parts[0]!r}") from None
+    if len(fan_rd) < 2:
+        raise ValueError(
+            f"--tiers needs >= 2 fan-outs (got {parts[0]!r}); the minimum "
+            "hierarchy is CLUSTERSxMUS")
+    periods: list = []
+    root_async = False
+    for p in parts[1:]:
+        if p.startswith("H="):
+            try:
+                periods = [int(h) for h in p[2:].split(",")]
+            except ValueError:
+                raise ValueError(
+                    f"--tiers periods must be integers, got {p!r}") from None
+        elif p == "async":
+            root_async = True
+        else:
+            raise ValueError(
+                f"unknown --tiers segment {p!r}; expected 'H=...' or "
+                "'async'")
+    fanouts = fan_rd[::-1]  # bottom-up
+    depth = len(fanouts)
+    if len(periods) > depth - 1:
+        raise ValueError(
+            f"--tiers has {len(periods)} periods for {depth - 1} "
+            "aggregation tier(s)")
+    periods = periods + [1] * (depth - 1 - len(periods))
+    tiers = [TierConfig(fanout=fanouts[0], period=1,
+                        phi_up=0.99, phi_down=0.9)]
+    for t in range(1, depth):
+        tiers.append(TierConfig(
+            fanout=fanouts[t], period=periods[t - 1],
+            phi_up=0.9, phi_down=0.9, beta_up=0.5, beta_down=0.2,
+            discipline=("async" if root_async and t == depth - 1
+                        else "lockstep"),
+        ))
+    return tuple(tiers)
+
+
+@dataclass(frozen=True)
+class HFLConfig:
+    """Hierarchical FL + sparse communication parameters (paper §III-IV).
+
+    The tree geometry, per-link sparsification, error feedback, and sync
+    cadence all live in ``tiers`` — one :class:`TierConfig` per
+    aggregation stage, bottom-up (arbitrary depth; the paper's tree is
+    depth 2). The legacy scalar constructor keywords (``num_clusters``,
+    ``mus_per_cluster``, ``period``, ``phi_*``, ``beta_*``) are still
+    accepted and reshape the depth-2 tuple; *reading* them back as
+    attributes warns once per process (``DeprecationWarning``) and is
+    only defined while the hierarchy is depth 2.
+    """
+
+    tiers: Tuple[TierConfig, ...] = DEFAULT_TIERS
     momentum: float = 0.9  # sigma
-    beta_m: float = 0.2  # discounted error accumulation at MBS
-    beta_s: float = 0.5  # discounted error accumulation at SBS
     sync_mode: str = "sparse"  # dense | sparse (paper) | quantized_sparse (beyond)
     # Ω selection implementation for the sync payloads:
     #   topk (exact lax.top_k) | hist (jnp histogram threshold) |
@@ -215,9 +374,136 @@ class HFLConfig:
     # sim.engine.make_async_sync_step)
     async_dl_sparse: bool = False
 
+    def __init__(self, tiers=None, momentum: float = 0.9,
+                 sync_mode: str = "sparse", omega_impl: str = "topk",
+                 sync_layout: str = "flat", flat_shards: int = 1,
+                 wire_format: str = "bf16",
+                 payload_accounting: str = "analytic",
+                 codec: str = "delta-varint", async_dl_sparse: bool = False,
+                 **legacy):
+        # dataclass skips generating __init__ when the class defines one;
+        # dataclasses.replace() funnels unknown keys here too, so
+        # replace(cfg, period=2) keeps working through the legacy shim
+        unknown = set(legacy) - set(_LEGACY_HFL_FIELDS)
+        if unknown:
+            raise TypeError(
+                f"HFLConfig got unexpected keyword(s) {sorted(unknown)}")
+        if tiers is None:
+            tiers = DEFAULT_TIERS
+        tiers = tuple(
+            t if isinstance(t, TierConfig)
+            else TierConfig(**t) if isinstance(t, dict)
+            else TierConfig(*t)
+            for t in tiers)
+        if len(tiers) < 2:
+            raise ValueError("HFLConfig.tiers needs >= 2 stages "
+                             "(MU tier + at least one aggregation tier)")
+        if legacy:
+            if len(tiers) != 2:
+                raise ValueError(
+                    f"legacy two-level keyword(s) {sorted(legacy)} are "
+                    f"ambiguous on a depth-{len(tiers)} hierarchy; set "
+                    "HFLConfig.tiers explicitly instead")
+            t0, t1 = tiers
+            t0 = dataclasses.replace(
+                t0,
+                fanout=legacy.get("mus_per_cluster", t0.fanout),
+                phi_up=legacy.get("phi_mu_ul", t0.phi_up),
+                phi_down=legacy.get("phi_sbs_dl", t0.phi_down))
+            t1 = dataclasses.replace(
+                t1,
+                fanout=legacy.get("num_clusters", t1.fanout),
+                period=legacy.get("period", t1.period),
+                phi_up=legacy.get("phi_sbs_ul", t1.phi_up),
+                phi_down=legacy.get("phi_mbs_dl", t1.phi_down),
+                beta_up=legacy.get("beta_s", t1.beta_up),
+                beta_down=legacy.get("beta_m", t1.beta_down))
+            tiers = (t0, t1)
+        object.__setattr__(self, "tiers", tiers)
+        object.__setattr__(self, "momentum", momentum)
+        object.__setattr__(self, "sync_mode", sync_mode)
+        object.__setattr__(self, "omega_impl", omega_impl)
+        object.__setattr__(self, "sync_layout", sync_layout)
+        object.__setattr__(self, "flat_shards", flat_shards)
+        object.__setattr__(self, "wire_format", wire_format)
+        object.__setattr__(self, "payload_accounting", payload_accounting)
+        object.__setattr__(self, "codec", codec)
+        object.__setattr__(self, "async_dl_sparse", async_dl_sparse)
+
+    # --- tree geometry (canonical, no deprecation) ---
+
+    @property
+    def depth(self) -> int:
+        return len(self.tiers)
+
+    def agg_count(self, tier: int) -> int:
+        """Number of tier-``tier`` aggregators (the root, depth-1, is 1)."""
+        return math.prod(t.fanout for t in self.tiers[tier + 1:])
+
+    @property
+    def num_clusters(self) -> int:
+        """N: first-level (SBS) aggregator count — ``agg_count(0)``."""
+        return self.agg_count(0)
+
+    @property
+    def mus_per_cluster(self) -> int:
+        """MUs per first-level aggregator — ``tiers[0].fanout``."""
+        return self.tiers[0].fanout
+
     @property
     def total_mus(self) -> int:
-        return self.num_clusters * self.mus_per_cluster
+        return math.prod(t.fanout for t in self.tiers)
+
+    # --- deprecated scalar reads (warn once per process, depth-2 only) ---
+
+    def _two_level(self) -> Tuple[TierConfig, TierConfig]:
+        if len(self.tiers) != 2:
+            raise AttributeError(
+                "legacy two-level HFLConfig fields are undefined for a "
+                f"depth-{len(self.tiers)} hierarchy; read cfg.tiers")
+        return self.tiers  # type: ignore[return-value]
+
+    @property
+    def period(self) -> int:
+        tiers = self._two_level()
+        _warn_legacy_hfl_field("period", "read cfg.tiers[-1].period")
+        return tiers[1].period
+
+    @property
+    def phi_mu_ul(self) -> float:
+        tiers = self._two_level()
+        _warn_legacy_hfl_field("phi_mu_ul", "read cfg.tiers[0].phi_up")
+        return tiers[0].phi_up
+
+    @property
+    def phi_sbs_dl(self) -> float:
+        tiers = self._two_level()
+        _warn_legacy_hfl_field("phi_sbs_dl", "read cfg.tiers[0].phi_down")
+        return tiers[0].phi_down
+
+    @property
+    def phi_sbs_ul(self) -> float:
+        tiers = self._two_level()
+        _warn_legacy_hfl_field("phi_sbs_ul", "read cfg.tiers[1].phi_up")
+        return tiers[1].phi_up
+
+    @property
+    def phi_mbs_dl(self) -> float:
+        tiers = self._two_level()
+        _warn_legacy_hfl_field("phi_mbs_dl", "read cfg.tiers[1].phi_down")
+        return tiers[1].phi_down
+
+    @property
+    def beta_s(self) -> float:
+        tiers = self._two_level()
+        _warn_legacy_hfl_field("beta_s", "read cfg.tiers[1].beta_up")
+        return tiers[1].beta_up
+
+    @property
+    def beta_m(self) -> float:
+        tiers = self._two_level()
+        _warn_legacy_hfl_field("beta_m", "read cfg.tiers[1].beta_down")
+        return tiers[1].beta_down
 
 
 # ---------------------------------------------------------------------------
@@ -250,6 +536,15 @@ class SimConfig:
     diurnal_phase: float = 0.0
     speed_mps: float = 0.0  # random-waypoint speed; 0 = static (paper)
     deadline_factor: float = 1.5  # deadline = factor * median per-MU round time
+    # --- client selection (participation-rate policies, sim.selection) ---
+    # fraction of each cluster's available members picked per round; 1.0
+    # keeps the legacy everyone-participates behaviour (no selector built)
+    prate: float = 1.0
+    # uniform -- unbiased per-round draw from the availability mask
+    # biased  -- best-channel-first (top UL rate), the Pareto-front policy
+    # kmeans  -- location-based k-means per cluster: one member nearest
+    #            each of ceil(prate*members) centroids (coverage-preserving)
+    selection: str = "uniform"
     staleness_exp: float = 1.0  # async weight = (1/N) * (1+staleness)^-exp
     reuse: int = 1  # frequency-reuse factor for the cluster coloring
     # --- trace-driven mobility replay (repro.sim.traces) ---

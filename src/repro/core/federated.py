@@ -111,7 +111,7 @@ def _hfl_iteration(state, batches, *, grad_fn, loss_fn, hfl, lr_schedule, impl):
         mean_loss = jnp.full((), jnp.nan, jnp.float32)
 
     def mu_dgc(u, v, g):
-        return sp.dgc_step(u, v, g, sigma, hfl.phi_mu_ul, impl=impl)
+        return sp.dgc_step(u, v, g, sigma, hfl.tiers[0].phi_up, impl=impl)
 
     ghat, u, v = jax.vmap(mu_dgc)(state["u"], state["v"], grads)
 
@@ -119,35 +119,35 @@ def _hfl_iteration(state, batches, *, grad_fn, loss_fn, hfl, lr_schedule, impl):
     ghat_n = ghat.reshape(N, M, Q).mean(axis=1)  # [N, Q]
 
     def sbs_step(w_tilde, gn, e_dl):
-        target = w_tilde - lr * gn + hfl.beta_s * e_dl
+        target = w_tilde - lr * gn + hfl.tiers[1].beta_up * e_dl
         delta = target - w_tilde
-        sent, _ = sp.omega(delta, hfl.phi_sbs_dl, impl=impl)
+        sent, _ = sp.omega(delta, hfl.tiers[0].phi_down, impl=impl)
         return w_tilde + sent, delta - sent
 
     w_tilde_n, e_n = jax.vmap(sbs_step)(state["w_tilde_n"], ghat_n, state["e_n"])
 
     # ---- every H: SBS <-> MBS global consensus (Alg.5 l.22-39) ----
     t_new = state["t"] + 1
-    do_sync = (t_new % hfl.period) == 0
+    do_sync = (t_new % hfl.tiers[1].period) == 0
 
     def sync(args):
         w_tilde_n, eps_n, w_ref, e, e_n = args
 
         def sbs_ul(wn, eps):
-            dn = wn - w_ref + hfl.beta_s * eps
-            sent, _ = sp.omega(dn, hfl.phi_sbs_ul, impl=impl)
+            dn = wn - w_ref + hfl.tiers[1].beta_up * eps
+            sent, _ = sp.omega(dn, hfl.tiers[1].phi_up, impl=impl)
             return sent, dn - sent
 
         sent_n, eps_n = jax.vmap(sbs_ul)(w_tilde_n, eps_n)
-        delta = sent_n.mean(axis=0) + hfl.beta_m * e
-        d, _ = sp.omega(delta, hfl.phi_mbs_dl, impl=impl)
+        delta = sent_n.mean(axis=0) + hfl.tiers[1].beta_down * e
+        d, _ = sp.omega(delta, hfl.tiers[1].phi_down, impl=impl)
         e = delta - d
         w_ref_new = w_ref + d
 
         # MBS -> SBS -> MU downlink of the new reference (sparse dl hop)
         def sbs_dl(wn, en):
-            dn = w_ref_new - wn + hfl.beta_s * en
-            sent, _ = sp.omega(dn, hfl.phi_sbs_dl, impl=impl)
+            dn = w_ref_new - wn + hfl.tiers[1].beta_up * en
+            sent, _ = sp.omega(dn, hfl.tiers[0].phi_down, impl=impl)
             return wn + sent, dn - sent
 
         w_tilde_n, e_n = jax.vmap(sbs_dl)(w_tilde_n, e_n)

@@ -36,8 +36,10 @@ The Ω selection itself is pluggable (``HFLConfig.omega_impl``): exact
 """
 from __future__ import annotations
 
+import warnings
+from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -235,10 +237,10 @@ def _make_flat_local_sync(hfl_cfg, wire, collect_stats: bool = False):
 
         # --- SBS side: drift + discounted error, whole-vector top-k uplink
         #     (Alg.5 l.24-27, Ω over V ∈ R^Q) ---
-        s = wn - wref[None, :] + hfl_cfg.beta_s * eps  # [N, Q]
+        s = wn - wref[None, :] + hfl_cfg.tiers[1].beta_up * eps  # [N, Q]
         sents, new_eps, ul_idx = [], [], []
         for n in range(N):  # static unroll; N is small
-            vals, idx = sp.pack_phi(s[n], hfl_cfg.phi_sbs_ul, impl=impl)
+            vals, idx = sp.pack_phi(s[n], hfl_cfg.tiers[1].phi_up, impl=impl)
             if wire:
                 vals = _wire_round(vals, wire)
             sent = sp.unpack_topk(vals, idx, Q)
@@ -247,8 +249,8 @@ def _make_flat_local_sync(hfl_cfg, wire, collect_stats: bool = False):
             ul_idx.append(idx)
 
         # --- MBS side: consensus + discounted error + top-k downlink ---
-        delta = sum(sents) / N + hfl_cfg.beta_m * e
-        dvals, didx = sp.pack_phi(delta, hfl_cfg.phi_mbs_dl, impl=impl)
+        delta = sum(sents) / N + hfl_cfg.tiers[1].beta_down * e
+        dvals, didx = sp.pack_phi(delta, hfl_cfg.tiers[1].phi_down, impl=impl)
         if wire:
             dvals = _wire_round(dvals, wire)
         d = sp.unpack_topk(dvals, didx, Q)
@@ -291,10 +293,10 @@ def _flat_shard_sync(params, w_ref, eps, e, *, hfl_cfg, wire):
     Q = ref_spec.total
 
     # --- SBS side (Alg.5 l.24-27): one whole-vector Ω per hosted cluster ---
-    s = wn - wref[None, :] + hfl_cfg.beta_s * eps_m  # [C, Qloc]
+    s = wn - wref[None, :] + hfl_cfg.tiers[1].beta_up * eps_m  # [C, Qloc]
     vals_l, idx_l, eps_rows = [], [], []
     for c in range(C):  # static; C == N // num_pods, normally 1
-        vals, idx = sp.pack_phi(s[c], hfl_cfg.phi_sbs_ul, impl=impl)
+        vals, idx = sp.pack_phi(s[c], hfl_cfg.tiers[1].phi_up, impl=impl)
         if wire:
             # quantize BEFORE accounting the residual: eps must buffer the
             # wire quantization error too, since receivers only ever see
@@ -329,8 +331,8 @@ def _flat_shard_sync(params, w_ref, eps, e, *, hfl_cfg, wire):
     )
 
     # --- MBS side: discounted error + whole-vector top-k downlink ---
-    delta = delta + hfl_cfg.beta_m * e_v
-    dvals, didx = sp.pack_phi(delta, hfl_cfg.phi_mbs_dl, impl=impl)
+    delta = delta + hfl_cfg.tiers[1].beta_down * e_v
+    dvals, didx = sp.pack_phi(delta, hfl_cfg.tiers[1].phi_down, impl=impl)
     if wire:
         dvals = _wire_round(dvals, wire)
     d = sp.unpack_topk(dvals, didx, Q)
@@ -431,10 +433,10 @@ def _make_flat_fused_local_sync(hfl_cfg, wire, collect_stats: bool = False):
         wref, ref_spec = fl.pack(state.w_ref)
         e, _ = fl.pack(state.e)
         Q = ref_spec.total
-        s, eps_spec = _pack_drift(state, hfl_cfg.beta_s)
+        s, eps_spec = _pack_drift(state, hfl_cfg.tiers[1].beta_up)
 
         # --- SBS side: batched whole-vector Ω uplinks (Alg.5 l.24-27) ---
-        k_ul = sp.keep_count(Q, hfl_cfg.phi_sbs_ul)
+        k_ul = sp.keep_count(Q, hfl_cfg.tiers[1].phi_up)
         vals, idx = fops.select_topk_rows(s, k_ul)  # [N, k]
         if wire:
             vals = _wire_round_rows(vals, wire)
@@ -444,8 +446,8 @@ def _make_flat_fused_local_sync(hfl_cfg, wire, collect_stats: bool = False):
         new_eps = s - sents
 
         # --- MBS side: consensus + discounted error + Ω downlink ---
-        delta = jnp.mean(sents, axis=0) + hfl_cfg.beta_m * e
-        k_dl = sp.keep_count(Q, hfl_cfg.phi_mbs_dl)
+        delta = jnp.mean(sents, axis=0) + hfl_cfg.tiers[1].beta_down * e
+        k_dl = sp.keep_count(Q, hfl_cfg.tiers[1].phi_down)
         dvals, didx = fops.select_topk_rows(delta[None, :], k_dl)
         dvals, didx = dvals[0], didx[0]
         if wire:
@@ -525,9 +527,9 @@ def _make_flat_sharded_local_sync(hfl_cfg, wire, shards: int):
         e, _ = fl.pack(state.e, shards=S)
         Q, Qp = ref_spec.total, ref_spec.padded_total
         L = ref_spec.local_size
-        s, eps_spec = _pack_drift(state, hfl_cfg.beta_s, shards=S)
+        s, eps_spec = _pack_drift(state, hfl_cfg.tiers[1].beta_up, shards=S)
 
-        k_ul = sp.keep_count(Q, hfl_cfg.phi_sbs_ul)
+        k_ul = sp.keep_count(Q, hfl_cfg.tiers[1].phi_up)
         # the exactness certificate is intentionally advisory here: when a
         # shard overflows its candidate capacity the merged union top-k is
         # used as-is (deterministic, documented in merge_shard_candidates)
@@ -538,9 +540,9 @@ def _make_flat_sharded_local_sync(hfl_cfg, wire, shards: int):
             vals = _wire_round_rows(vals, wire)
         sents = _scatter_rows(idx, vals, Qp)
         new_eps = s - sents
-        delta = jnp.mean(sents, axis=0) + hfl_cfg.beta_m * e
+        delta = jnp.mean(sents, axis=0) + hfl_cfg.tiers[1].beta_down * e
 
-        k_dl = sp.keep_count(Q, hfl_cfg.phi_mbs_dl)
+        k_dl = sp.keep_count(Q, hfl_cfg.tiers[1].phi_down)
         dvals, didx, _exact_d = _sharded_select(delta[None, :], k_dl, S, L, Qp)
         dvals, didx = dvals[0], didx[0]
         if wire:
@@ -597,7 +599,7 @@ def _make_flat_sharded_sync(hfl_cfg, wire, mesh):
 
     def body(s, wref, e, *, Q, Qp, L):
         # s [N, L]; wref/e [L] — this device's contiguous piece
-        k_ul = sp.keep_count(Q, hfl_cfg.phi_sbs_ul)
+        k_ul = sp.keep_count(Q, hfl_cfg.tiers[1].phi_up)
         off = shard_offset(L)
         v, i, m, th = fops.shard_select_candidates(s, k_ul, S)
         gi = jnp.where(i < L, i + off, Qp)
@@ -616,9 +618,9 @@ def _make_flat_sharded_sync(hfl_cfg, wire, mesh):
             jnp.where(inb, loc, L - 1), jnp.where(inb, vals, 0.0), L
         )
         new_eps = s - sents
-        delta = jnp.mean(sents, axis=0) + hfl_cfg.beta_m * e
+        delta = jnp.mean(sents, axis=0) + hfl_cfg.tiers[1].beta_down * e
 
-        k_dl = sp.keep_count(Q, hfl_cfg.phi_mbs_dl)
+        k_dl = sp.keep_count(Q, hfl_cfg.tiers[1].phi_down)
         dv, di, dm, dth = fops.shard_select_candidates(delta[None, :], k_dl, S)
         dgi = jnp.where(di < L, di + off, Qp)
         dg = tuple(gather_shard_major(t) for t in (dv, dgi, dm, dth))
@@ -643,7 +645,7 @@ def _make_flat_sharded_sync(hfl_cfg, wire, mesh):
         wref, ref_spec = fl.pack(state.w_ref, shards=S)
         e, _ = fl.pack(state.e, shards=S)
         Q, Qp, L = ref_spec.total, ref_spec.padded_total, ref_spec.local_size
-        s, eps_spec = _pack_drift(state, hfl_cfg.beta_s, shards=S)
+        s, eps_spec = _pack_drift(state, hfl_cfg.tiers[1].beta_up, shards=S)
         vec = P(axes if len(axes) > 1 else axes[0])
         mat = P(None, *vec)
         s = jax.lax.with_sharding_constraint(
@@ -680,8 +682,8 @@ def _leaf_sync_sparse(wn, wref, eps, e, *, hfl_cfg, axis, wire):
     e_f = e.reshape(-1)
 
     # --- SBS side: drift + discounted error, top-k uplink (Alg.5 l.24-27) ---
-    s = (wn0 - wref_f) + hfl_cfg.beta_s * eps_f
-    k_ul = sp.keep_count(size, hfl_cfg.phi_sbs_ul)
+    s = (wn0 - wref_f) + hfl_cfg.tiers[1].beta_up * eps_f
+    k_ul = sp.keep_count(size, hfl_cfg.tiers[1].phi_up)
     vals, idx = sp.pack_topk(s, k_ul)
     if wire:
         vals = _wire_round(vals, wire)  # residual buffers the wire error too
@@ -706,8 +708,8 @@ def _leaf_sync_sparse(wn, wref, eps, e, *, hfl_cfg, axis, wire):
         delta = sent / N
 
     # --- MBS side: discounted error + top-k downlink (Alg.5 l.28-31) ---
-    delta = delta + hfl_cfg.beta_m * e_f
-    k_dl = sp.keep_count(size, hfl_cfg.phi_mbs_dl)
+    delta = delta + hfl_cfg.tiers[1].beta_down * e_f
+    k_dl = sp.keep_count(size, hfl_cfg.tiers[1].phi_down)
     dvals, didx = sp.pack_topk(delta, k_dl)
     if wire:
         dvals = _wire_round(dvals, wire)
@@ -737,16 +739,16 @@ def _make_leaf_local_sync(hfl_cfg, wire):
             outs_eps, sents = [], []
             for n in range(N):  # static unroll; N is small
                 s = (wn[n].astype(jnp.float32).reshape(-1) - wref_f) \
-                    + hfl_cfg.beta_s * eps[n].reshape(-1)
-                k_ul = sp.keep_count(size, hfl_cfg.phi_sbs_ul)
+                    + hfl_cfg.tiers[1].beta_up * eps[n].reshape(-1)
+                k_ul = sp.keep_count(size, hfl_cfg.tiers[1].phi_up)
                 vals, idx = sp.pack_topk(s, k_ul)
                 if wire:
                     vals = _wire_round(vals, wire)
                 sent = sp.unpack_topk(vals, idx, size)
                 outs_eps.append(s - sent)
                 sents.append(sent)
-            delta = sum(sents) / N + hfl_cfg.beta_m * e.reshape(-1)
-            k_dl = sp.keep_count(size, hfl_cfg.phi_mbs_dl)
+            delta = sum(sents) / N + hfl_cfg.tiers[1].beta_down * e.reshape(-1)
+            k_dl = sp.keep_count(size, hfl_cfg.tiers[1].phi_down)
             dvals, didx = sp.pack_topk(delta, k_dl)
             if wire:
                 dvals = _wire_round(dvals, wire)
@@ -769,6 +771,313 @@ def _make_leaf_local_sync(hfl_cfg, wire):
         return state._replace(params=pick(0), w_ref=pick(1), eps=pick(2), e=pick(3))
 
     return local_sync
+
+
+# ---- arbitrary-depth hierarchy: per-tier cascade over the flat buffer -----
+
+
+class HierBufs(NamedTuple):
+    """Flat f32 side buffers of the tiers between the clusters and the root
+    (depth T >= 3; ``A_t = HFLConfig.agg_count(t)`` aggregators per tier).
+
+      * ``refs[t-1]``  [A_t, Q]      tier-t reference models, t in 1..T-2
+      * ``eps[t-2]``   [A_{t-1}, Q]  tier-t uplink errors,    t in 2..T-1
+      * ``errs[t-1]``  [A_t, Q]      tier-t downlink errors,  t in 1..T-2
+
+    Tier 1's uplink error is ``HFLState.eps`` and the root's reference /
+    downlink error are ``HFLState.w_ref`` / ``HFLState.e`` — the depth-2
+    state layout is untouched; the extra tiers ride OUTSIDE the state,
+    threaded by the caller exactly like the async engine's ``e_dl``.
+    """
+
+    refs: tuple
+    eps: tuple
+    errs: tuple
+
+
+def init_hier_bufs(state: HFLState, hfl_cfg) -> HierBufs:
+    """Zero-error, reference-replicated buffers for ``HierSyncStep``."""
+    T = len(hfl_cfg.tiers)
+    wref, ref_spec = fl.pack(state.w_ref)
+    Q = ref_spec.total
+    refs = tuple(
+        jnp.broadcast_to(wref[None], (hfl_cfg.agg_count(t), Q))
+        for t in range(1, T - 1)
+    )
+    eps = tuple(
+        jnp.zeros((hfl_cfg.agg_count(t - 1), Q), jnp.float32)
+        for t in range(2, T)
+    )
+    errs = tuple(
+        jnp.zeros((hfl_cfg.agg_count(t), Q), jnp.float32)
+        for t in range(1, T - 1)
+    )
+    return HierBufs(refs=refs, eps=eps, errs=errs)
+
+
+def hier_fire_top(tiers, round_idx: int) -> int:
+    """Highest tier firing at (1-based) tier-1 round ``round_idx``.
+
+    Tier 1 fires every round; tier t >= 2 fires every
+    ``prod(tiers[2..t].period)`` tier-1 rounds (each tier's period counts
+    rounds of the tier below it)."""
+    top, stride = 1, 1
+    for t in range(2, len(tiers)):
+        stride *= tiers[t].period
+        if round_idx % stride == 0:
+            top = t
+    return top
+
+
+def _hier_cascade(state: HFLState, bufs: HierBufs, *, hfl_cfg, top: int,
+                  wire):
+    """One boundary of the tiered consensus: tiers 1..``top`` sync
+    bottom-up, then every level below ``top`` adopts its (new) ancestor
+    reference.
+
+    Each tier runs the SAME drift/Ω/error-feedback protocol the two-level
+    sync runs between SBS and MBS (Alg.5 l.24-31), with its own
+    ``phi_up/phi_down/beta_up/beta_down``: children are grouped
+    contiguously (child c of tier t-1 belongs to parent ``c // fanout_t``),
+    the group mean + ``beta_down``-discounted error is Ω-sparsified on the
+    downlink, and the parent reference absorbs the surviving delta. The
+    depth-2 instance of this cascade is algebraically the flat local sync;
+    the engine still routes depth-2 configs through the historical
+    builders so that path stays bit-identical by construction.
+    """
+    tiers = hfl_cfg.tiers
+    T = len(tiers)
+    impl = hfl_cfg.omega_impl
+    assert 1 <= top <= T - 1
+
+    wn, p_spec = fl.pack_stacked(state.params)      # [N, Q]
+    eps1, eps_spec = fl.pack_stacked(state.eps)     # [N, Q]
+    wref, ref_spec = fl.pack(state.w_ref)           # [Q] root reference
+    e_root, _ = fl.pack(state.e)
+    Q = ref_spec.total
+
+    refs = list(bufs.refs)                     # index t-1, t in 1..T-2
+    epsu = [eps1] + list(bufs.eps)             # index t-1, t in 1..T-1
+    errs = list(bufs.errs) + [e_root[None, :]]  # index t-1, t in 1..T-1
+
+    child = wn  # current child models, level t-1, [A_{t-1}, Q]
+    for t in range(1, top + 1):
+        tc = tiers[t]
+        A = hfl_cfg.agg_count(t)
+        G = tc.fanout
+        ref_t = refs[t - 1] if t <= T - 2 else wref[None, :]  # [A, Q]
+
+        # --- uplink: per-child drift + discounted error, Ω(phi_up) ---
+        s = child - jnp.repeat(ref_t, G, axis=0) + tc.beta_up * epsu[t - 1]
+        sent_rows, eps_rows = [], []
+        for r in range(A * G):  # static unroll; tier widths are small
+            vals, idx = sp.pack_phi(s[r], tc.phi_up, impl=impl)
+            if wire:
+                vals = _wire_round(vals, wire)
+            sent = sp.unpack_topk(vals, idx, Q)
+            sent_rows.append(sent)
+            eps_rows.append(s[r] - sent)
+        sent = jnp.stack(sent_rows).reshape(A, G, Q)
+        epsu[t - 1] = jnp.stack(eps_rows)
+
+        # --- aggregator: group consensus + discounted error, Ω(phi_down) ---
+        delta = sent.mean(axis=1) + tc.beta_down * errs[t - 1]  # [A, Q]
+        d_rows, e_rows = [], []
+        for a in range(A):
+            dvals, didx = sp.pack_phi(delta[a], tc.phi_down, impl=impl)
+            if wire:
+                dvals = _wire_round(dvals, wire)
+            d = sp.unpack_topk(dvals, didx, Q)
+            d_rows.append(d)
+            e_rows.append(delta[a] - d)
+        new_ref = ref_t + jnp.stack(d_rows)
+        errs[t - 1] = jnp.stack(e_rows)
+        if t <= T - 2:
+            refs[t - 1] = new_ref
+        else:
+            wref = new_ref[0]
+        child = new_ref
+
+    # --- downward adoption: every level below ``top`` adopts its new
+    #     ancestor reference (Alg.5 l.33/43 applied per subtree) ---
+    adopt = child  # [A_top, Q]
+    for t in range(top, 0, -1):
+        adopt = jnp.repeat(adopt, tiers[t].fanout, axis=0)  # -> [A_{t-1}, Q]
+        if t - 1 >= 1:
+            refs[t - 2] = adopt
+
+    new_state = state._replace(
+        params=fl.unpack_stacked(adopt, p_spec),
+        eps=fl.unpack_stacked(epsu[0], eps_spec),
+        w_ref=(fl.unpack(wref, ref_spec) if top == T - 1 else state.w_ref),
+        e=(fl.unpack(errs[T - 2][0], ref_spec) if top == T - 1 else state.e),
+    )
+    new_bufs = HierBufs(
+        refs=tuple(refs),
+        eps=tuple(epsu[1:]),
+        errs=tuple(errs[:T - 2]),
+    )
+    return new_state, new_bufs
+
+
+def _hier_edge_sync(state: HFLState, bufs: HierBufs, *, hfl_cfg, e: int,
+                    wire):
+    """Tier-1 consensus of ONE edge (depth-3 async-mixed hierarchies):
+    edge ``e``'s clusters run the drift/Ω/error-feedback group sync against
+    the edge's own reference while every other edge's state is untouched —
+    the per-edge analogue of one ``top=1`` cascade boundary."""
+    t1 = hfl_cfg.tiers[1]
+    G = t1.fanout
+    impl = hfl_cfg.omega_impl
+    wn, p_spec = fl.pack_stacked(state.params)
+    eps1, eps_spec = fl.pack_stacked(state.eps)
+    Q = wn.shape[1]
+    ref = bufs.refs[0][e]
+    err = bufs.errs[0][e]
+    sent_rows = []
+    eps_new = eps1
+    for j in range(G):
+        c = e * G + j
+        s = wn[c] - ref + t1.beta_up * eps1[c]
+        vals, idx = sp.pack_phi(s, t1.phi_up, impl=impl)
+        if wire:
+            vals = _wire_round(vals, wire)
+        sent = sp.unpack_topk(vals, idx, Q)
+        sent_rows.append(sent)
+        eps_new = eps_new.at[c].set(s - sent)
+    delta = jnp.stack(sent_rows).mean(axis=0) + t1.beta_down * err
+    dvals, didx = sp.pack_phi(delta, t1.phi_down, impl=impl)
+    if wire:
+        dvals = _wire_round(dvals, wire)
+    d = sp.unpack_topk(dvals, didx, Q)
+    new_ref = ref + d
+    wn_new = wn
+    for j in range(G):
+        wn_new = wn_new.at[e * G + j].set(new_ref)
+    new_bufs = bufs._replace(
+        refs=(bufs.refs[0].at[e].set(new_ref),),
+        errs=(bufs.errs[0].at[e].set(delta - d),),
+    )
+    state = state._replace(
+        params=fl.unpack_stacked(wn_new, p_spec),
+        eps=fl.unpack_stacked(eps_new, eps_spec),
+    )
+    return state, new_bufs
+
+
+def _hier_root_push(state: HFLState, bufs: HierBufs, weight, *, hfl_cfg,
+                    e: int, wire):
+    """Staleness-weighted async push of edge ``e``'s reference to the root
+    (depth-3): Ω(phi_up) of the edge's drift with its tier-2 error buffer,
+    applied ``weight``-discounted to the root reference; the edge then
+    densely adopts the fresh root (the async engine's historical dense-DL
+    contract, now one level up)."""
+    t2 = hfl_cfg.tiers[2]
+    impl = hfl_cfg.omega_impl
+    wref, ref_spec = fl.pack(state.w_ref)
+    Q = wref.shape[0]
+    refs0, eps2 = bufs.refs[0], bufs.eps[0]
+    s = refs0[e] - wref + t2.beta_up * eps2[e]
+    vals, idx = sp.pack_phi(s, t2.phi_up, impl=impl)
+    if wire:
+        vals = _wire_round(vals, wire)
+    sent = sp.unpack_topk(vals, idx, Q)
+    new_wref = wref + weight * sent
+    wn, p_spec = fl.pack_stacked(state.params)
+    G = hfl_cfg.tiers[1].fanout
+    wn_new = wn
+    for j in range(G):
+        wn_new = wn_new.at[e * G + j].set(new_wref)
+    new_bufs = bufs._replace(
+        refs=(refs0.at[e].set(new_wref),),
+        eps=(eps2.at[e].set(s - sent),),
+    )
+    state = state._replace(
+        params=fl.unpack_stacked(wn_new, p_spec),
+        w_ref=fl.unpack(new_wref, ref_spec),
+    )
+    return state, new_bufs
+
+
+class HierSyncStep:
+    """Tiered consensus for depth > 2: ``(state, bufs, top=...) ->
+    (state, bufs)``.
+
+    One jitted program per distinct ``top`` boundary (there are at most
+    depth-1 of them), each donating both the state and the tier buffers.
+    Build the initial buffers with :meth:`init_bufs`; ``top`` defaults to
+    a full root sync. The engine detects this object via the ``hier``
+    attribute and threads the buffers through the run loop.
+    """
+
+    hier = True
+    collect_stats = False
+
+    def __init__(self, hfl_cfg):
+        if hfl_cfg.sync_mode not in ("sparse", "quantized_sparse"):
+            raise ValueError(
+                "depth > 2 hierarchies run the sparse consensus only "
+                f"(sync_mode={hfl_cfg.sync_mode!r})")
+        if hfl_cfg.omega_impl == "fused":
+            raise ValueError(
+                "omega_impl='fused' is depth-2 only; use 'topk'/'hist' "
+                "for deeper hierarchies")
+        _count_build("sync_step", mode=hfl_cfg.sync_mode, layout="hier",
+                     impl=hfl_cfg.omega_impl)
+        self.cfg = hfl_cfg
+        self._wire = wire_format_of(hfl_cfg)
+        self._fns = {}
+        self._edge_fns = ({}, {})
+
+    def init_bufs(self, state: HFLState) -> HierBufs:
+        return init_hier_bufs(state, self.cfg)
+
+    def fire_top(self, round_idx: int) -> int:
+        return hier_fire_top(self.cfg.tiers, round_idx)
+
+    def __call__(self, state: HFLState, bufs: HierBufs, top: int = None):
+        if top is None:
+            top = len(self.cfg.tiers) - 1
+        fn = self._fns.get(top)
+        if fn is None:
+            fn = jax.jit(
+                partial(_hier_cascade, hfl_cfg=self.cfg, top=top,
+                        wire=self._wire),
+                donate_argnums=(0, 1),
+            )
+            self._fns[top] = fn
+        return fn(state, bufs)
+
+    def edge_ops(self):
+        """Depth-3 async-mixed helpers -> ``(edge_sync, root_push)``:
+        ``edge_sync(state, bufs, e)`` runs edge ``e``'s tier-1 group
+        consensus; ``root_push(state, bufs, e, weight)`` pushes the edge's
+        reference to the root with a staleness weight. One jitted donating
+        program per edge (edge count = ``tiers[2].fanout``, small)."""
+        if len(self.cfg.tiers) != 3:
+            raise ValueError("edge_ops supports depth-3 hierarchies only")
+        sync_fns, push_fns = self._edge_fns
+
+        def edge_sync(state, bufs, e: int):
+            fn = sync_fns.get(e)
+            if fn is None:
+                fn = jax.jit(
+                    partial(_hier_edge_sync, hfl_cfg=self.cfg, e=int(e),
+                            wire=self._wire),
+                    donate_argnums=(0, 1))
+                sync_fns[e] = fn
+            return fn(state, bufs)
+
+        def root_push(state, bufs, e: int, weight: float):
+            fn = push_fns.get(e)
+            if fn is None:
+                fn = jax.jit(
+                    partial(_hier_root_push, hfl_cfg=self.cfg, e=int(e),
+                            wire=self._wire),
+                    donate_argnums=(0, 1))
+                push_fns[e] = fn
+            return fn(state, bufs, jnp.float32(weight))
+        return edge_sync, root_push
 
 
 # ---- builder --------------------------------------------------------------
@@ -797,24 +1106,85 @@ def jit_sync_step(sync_step):
     the flag is propagated onto the jitted callable so callers handed a
     pre-built step (the engine) can detect the return shape with
     ``getattr(sync, "collect_stats", False)``.
+
+    A :class:`HierSyncStep` (depth > 2) manages its own per-boundary
+    jitted programs (state AND tier buffers donated) and passes through
+    unchanged, so the ``jit_sync_step(make_sync(...))`` idiom works at
+    any depth.
     """
+    if getattr(sync_step, "hier", False):
+        return sync_step
     jitted = jax.jit(sync_step, donate_argnums=0)
     jitted.collect_stats = bool(getattr(sync_step, "collect_stats", False))
     return jitted
 
 
+@dataclass(frozen=True)
+class SyncPlan:
+    """Resolved spec of ONE consensus step build — the single argument of
+    :func:`make_sync`.
+
+    ``make_sync_step``'s keyword surface grew one knob per subsystem
+    (mesh, param_specs, layout override, collect_stats, …); a plan bundles
+    them so call sites carry one object and new knobs stop rippling
+    through every caller's signature. ``SyncPlan.from_config(hfl_cfg)``
+    is the common case; everything else defaults.
+
+      * ``hfl``           the :class:`HFLConfig` (tiers, mode, Ω impl, …)
+      * ``mesh``          None -> single-process; a mesh with a "pod" axis
+                          runs the per-device shard_map exchange
+      * ``param_specs``   pytree of PartitionSpec (no leading cluster
+                          axis); required for sparse modes on a pod mesh
+      * ``layout``        overrides ``hfl.sync_layout`` ("flat" | "leaf")
+      * ``collect_stats`` also return in-jit learning-health statistics
+                          (local dense/flat-topk/flat-fused paths only)
+    """
+
+    hfl: Any
+    mesh: Any = None
+    param_specs: Any = None
+    layout: Optional[str] = None
+    collect_stats: bool = False
+
+    @classmethod
+    def from_config(cls, hfl_cfg, *, mesh=None, param_specs=None,
+                    layout=None, collect_stats: bool = False) -> "SyncPlan":
+        return cls(hfl=hfl_cfg, mesh=mesh, param_specs=param_specs,
+                   layout=layout, collect_stats=collect_stats)
+
+
+_make_sync_step_warned = False
+
+
 def make_sync_step(hfl_cfg, mesh=None, param_specs=None, *, layout=None,
                    collect_stats: bool = False):
-    """Build the every-H consensus step.
+    """Deprecated keyword-surface wrapper: build a :class:`SyncPlan` and
+    call :func:`make_sync` instead. Warns once per process; behaviour is
+    unchanged (the plan carries exactly these arguments)."""
+    global _make_sync_step_warned
+    if not _make_sync_step_warned:
+        _make_sync_step_warned = True
+        warnings.warn(
+            "make_sync_step(hfl_cfg, mesh=..., param_specs=..., "
+            "layout=..., collect_stats=...) is deprecated; build a "
+            "SyncPlan (SyncPlan.from_config) and call make_sync(plan)",
+            DeprecationWarning, stacklevel=2)
+    return make_sync(SyncPlan(hfl=hfl_cfg, mesh=mesh,
+                              param_specs=param_specs, layout=layout,
+                              collect_stats=collect_stats))
 
-    ``param_specs``: pytree of PartitionSpec (without the leading cluster
-    axis) matching ``params_single`` — required for sparse modes on a mesh
-    with a "pod" axis. ``mesh=None`` -> single-process (tests/CPU); the
-    cluster axis is then a plain leading axis and the exchange is a
-    concatenation instead of an all-gather.
 
-    ``layout`` overrides ``hfl_cfg.sync_layout`` ("flat" whole-model Ω —
-    the default — or the legacy "leaf" reference path).
+def make_sync(plan: SyncPlan):
+    """Build the consensus step described by ``plan``.
+
+    Depth-2 configs keep the historical two-level builders (bit-identical
+    to the pre-tier code); depth > 2 returns a :class:`HierSyncStep`
+    running the per-tier cascade (single-process flat layout only).
+
+    ``mesh=None`` -> single-process (tests/CPU); the cluster axis is then
+    a plain leading axis and the exchange is a concatenation instead of
+    an all-gather. ``param_specs`` is required for sparse modes on a mesh
+    with a "pod" axis.
 
     Flat-layout routing by Ω impl and mesh:
 
@@ -837,6 +1207,21 @@ def make_sync_step(hfl_cfg, mesh=None, param_specs=None, *, layout=None,
     flat-topk and flat-fused paths — the ones the simulator drives;
     sharded/mesh/leaf layouts raise.
     """
+    hfl_cfg = plan.hfl
+    mesh, param_specs = plan.mesh, plan.param_specs
+    layout, collect_stats = plan.layout, plan.collect_stats
+    if len(hfl_cfg.tiers) > 2:
+        if mesh is not None:
+            raise ValueError(
+                "depth > 2 hierarchies are single-process only (mesh=None)")
+        if collect_stats:
+            raise ValueError(
+                "collect_stats is not supported on the hierarchical "
+                "cascade (depth-2 local flat paths only)")
+        if (layout or getattr(hfl_cfg, "sync_layout", "flat")) != "flat":
+            raise ValueError(
+                "depth > 2 hierarchies run the flat layout only")
+        return HierSyncStep(hfl_cfg)
     mode = hfl_cfg.sync_mode
     _count_build(
         "sync_step", mode=mode,

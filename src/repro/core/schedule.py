@@ -32,6 +32,12 @@ def run_hfl(
 
     Call order per step is unchanged from the historical loop: train, then
     (at period boundaries) sync, then ``on_step(t, state, loss)``.
+
+    ``period`` is the TIER-1 period (``hfl_cfg.tiers[1].period``). A
+    depth > 2 ``sync_step`` (``core.hfl.HierSyncStep``) is detected by the
+    engine, which threads its tier buffers and fires the higher boundaries
+    on their own per-tier periods (``hier_fire_top``); with an async root
+    tier the run switches to the mixed-discipline event loop.
     """
     from repro.sim.engine import SimEngine
 

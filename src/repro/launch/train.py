@@ -41,9 +41,11 @@ import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
-from repro.configs.base import HFLConfig
+from repro.configs.base import (
+    HFLConfig, parse_tiers_spec, warn_legacy_cli_flag,
+)
 from repro.core.hfl import (
-    hfl_init, jit_sync_step, make_cluster_train_step, make_sync_step,
+    SyncPlan, hfl_init, jit_sync_step, make_cluster_train_step, make_sync,
     serving_params,
 )
 from repro.core.schedule import run_hfl
@@ -72,9 +74,19 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--steps", type=int, default=200)
-    ap.add_argument("--clusters", type=int, default=4)
-    ap.add_argument("--mus", type=int, default=2)
-    ap.add_argument("--period", type=int, default=4)
+    ap.add_argument("--tiers", default=None,
+                    help="hierarchy spec FANOUTS[:H=PERIODS][:async]: "
+                         "fan-outs root-down (4x2 = 4 clusters x 2 MUs), "
+                         "aggregation periods bottom-up (H=4, or H=4,2 "
+                         "for a depth-3 root every 2 tier-1 rounds), "
+                         "':async' makes the root tier clock-free. "
+                         "Replaces --clusters/--mus/--period")
+    ap.add_argument("--clusters", type=int, default=None,
+                    help="DEPRECATED alias of --tiers CxM:H=P")
+    ap.add_argument("--mus", type=int, default=None,
+                    help="DEPRECATED alias of --tiers CxM:H=P")
+    ap.add_argument("--period", type=int, default=None,
+                    help="DEPRECATED alias of --tiers CxM:H=P")
     ap.add_argument("--sync", default="sparse",
                     choices=["dense", "sparse", "quantized_sparse"])
     ap.add_argument("--omega-impl", default="topk",
@@ -116,7 +128,9 @@ def main(argv=None):
                          "paper-fig3 | stragglers | mobility | dropout | "
                          "async | trace-replay | manhattan | diurnal | "
                          "flash-crowd | scale-1m (live 1.05M-MU fleet) | "
-                         "scale-100k (deprecated alias of scale-1m). "
+                         "scale-100k (deprecated alias of scale-1m) | "
+                         "hier-3tier (depth-3 tiered consensus) | "
+                         "prate-biased (rate-biased client selection). "
                          "A scenario may pin HFL settings (paper-fig3 pins "
                          "the paper's 7-cluster topology, K=4, H=2, φ).")
     ap.add_argument("--sim-seed", type=int, default=0,
@@ -193,8 +207,26 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    legacy_flags = {"--clusters": args.clusters, "--mus": args.mus,
+                    "--period": args.period}
+    given = {f: v for f, v in legacy_flags.items() if v is not None}
+    if args.tiers is not None:
+        if given:
+            raise SystemExit(
+                f"--tiers conflicts with {'/'.join(sorted(given))}; the "
+                "hierarchy is fully specified by the --tiers spec")
+        tiers = parse_tiers_spec(args.tiers)
+    else:
+        for f in sorted(given):
+            warn_legacy_cli_flag(
+                f, "--tiers CLUSTERSxMUS:H=PERIOD "
+                   "(fan-outs root-down, periods bottom-up)")
+        clusters = args.clusters if args.clusters is not None else 4
+        mus = args.mus if args.mus is not None else 2
+        period = args.period if args.period is not None else 4
+        tiers = parse_tiers_spec(f"{clusters}x{mus}:H={period}")
     hfl = HFLConfig(
-        num_clusters=args.clusters, mus_per_cluster=args.mus, period=args.period,
+        tiers=tiers,
         sync_mode=args.sync, omega_impl=args.omega_impl,
         sync_layout=args.sync_layout, flat_shards=args.flat_shards,
         payload_accounting=args.payload_accounting, codec=args.codec,
@@ -206,11 +238,11 @@ def main(argv=None):
     log.log(
         "config",
         f"[train] arch={cfg.name} clusters={hfl.num_clusters} "
-        f"mus/cluster={hfl.mus_per_cluster} H={hfl.period} sync={hfl.sync_mode} "
+        f"mus/cluster={hfl.mus_per_cluster} H={hfl.tiers[1].period} sync={hfl.sync_mode} "
         f"layout={hfl.sync_layout} omega={hfl.omega_impl}"
         + (f" scenario={scenario.name}" if scenario is not None else ""),
         arch=cfg.name, clusters=hfl.num_clusters,
-        mus_per_cluster=hfl.mus_per_cluster, period=hfl.period,
+        mus_per_cluster=hfl.mus_per_cluster, period=hfl.tiers[1].period,
         sync=hfl.sync_mode, layout=hfl.sync_layout, omega=hfl.omega_impl,
         payload_accounting=hfl.payload_accounting,
         scenario=(scenario.name if scenario is not None else None),
@@ -246,10 +278,13 @@ def main(argv=None):
     # with --obs-health on a scenario run the sync also returns its in-jit
     # health statistics (supported on the local flat/fused/dense paths;
     # sharded layouts raise in make_sync_step, so gate on the flags)
+    # in-sync health stats are a depth-2 local-flat feature; deeper
+    # hierarchies run the tiered cascade which rejects collect_stats
     collect = bool(args.obs_health and scenario is not None
-                   and args.sync_layout == "flat" and args.flat_shards == 1)
+                   and args.sync_layout == "flat" and args.flat_shards == 1
+                   and hfl.depth == 2)
     sync_step = jit_sync_step(
-        make_sync_step(hfl, mesh=None, collect_stats=collect))
+        make_sync(SyncPlan.from_config(hfl, collect_stats=collect)))
 
     lm = SyntheticLM(cfg.vocab_size, seed=1)
     rng = np.random.default_rng(2)
@@ -345,7 +380,7 @@ def main(argv=None):
                     dropped=tele.tracer.dropped)
     else:
         state = run_hfl(state, train_step, sync_step, make_batches(lm, rng),
-                        hfl.period, args.steps, on_step)
+                        hfl.tiers[1].period, args.steps, on_step)
 
     timing = clock.summary()
     if timing["steps"]:

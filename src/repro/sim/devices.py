@@ -204,10 +204,12 @@ class DeviceFleet:
 
     # --- cluster aggregates ----------------------------------------------
     #
-    # Membership is queried once per event by the engine; at fleet scale a
-    # fresh ``nonzero`` per query is O(K) each. The CSR cache amortises that
-    # to one stable argsort per (re)association epoch, after which any
-    # cluster's member list / size / compute max is an O(size) slice.
+    # Membership is queried once per event by the engine, and once per
+    # cluster per round by the client selector (``sim.selection``); at
+    # fleet scale a fresh ``nonzero`` per query is O(K) each. The CSR cache
+    # amortises that to one stable argsort per (re)association epoch, after
+    # which any cluster's member list / size / compute max is an O(size)
+    # slice.
 
     def _clusters(self):
         if self._cluster_cache is None:

@@ -188,8 +188,8 @@ def make_async_sync_step(
         bits = {}
 
         # --- uplink (Alg.5 l.24-27 for ONE cluster) ---
-        s = wn_all[n] - wref + hfl_cfg.beta_s * eps_all[n]
-        vals, idx = sp.pack_phi(s, hfl_cfg.phi_sbs_ul, impl=impl)
+        s = wn_all[n] - wref + hfl_cfg.tiers[1].beta_up * eps_all[n]
+        vals, idx = sp.pack_phi(s, hfl_cfg.tiers[1].phi_up, impl=impl)
         if wire:
             # the residual buffers the wire error too (receivers only
             # ever see the rounded value), matching the lockstep paths
@@ -204,8 +204,8 @@ def make_async_sync_step(
 
         # --- downlink ---
         if dl_sparse:
-            diff = new_wref - wn_all[n] + hfl_cfg.beta_m * e_dl[n]
-            dvals, didx = sp.pack_phi(diff, hfl_cfg.phi_mbs_dl, impl=impl)
+            diff = new_wref - wn_all[n] + hfl_cfg.tiers[1].beta_down * e_dl[n]
+            dvals, didx = sp.pack_phi(diff, hfl_cfg.tiers[1].phi_down, impl=impl)
             if wire:
                 dvals = _wire_round(dvals, wire)
             if codec is not None:
@@ -413,6 +413,28 @@ class SimEngine:
             if hfl_cfg is not None else "analytic"
         if self._acc not in ("analytic", "measured"):
             raise ValueError(f"unknown payload_accounting {self._acc!r}")
+        if self._acc == "measured" and hfl_cfg is not None \
+                and len(hfl_cfg.tiers) > 2:
+            # the probe mirrors the two-level flat sync; measuring a deeper
+            # cascade's payloads through it would report bits that were
+            # never transmitted
+            raise ValueError(
+                "payload_accounting='measured' supports depth-2 "
+                "hierarchies only")
+        # client selection (sim.selection): caps each cluster's
+        # participants at ceil(prate * size) under a policy. None = the
+        # identity (prate >= 1, uniform) — no RNG stream is even created,
+        # so existing scenarios replay bit-identically.
+        self.selector = None
+        if self.wireless:
+            from repro.sim.selection import make_selector
+
+            self.selector = make_selector(hfl_cfg, self.sim)
+        elif (float(getattr(sim_cfg, "prate", 1.0) if sim_cfg else 1.0) < 1.0
+              or getattr(sim_cfg, "selection", "uniform") != "uniform"):
+            raise ValueError(
+                "client selection (prate < 1 or a non-uniform policy) "
+                "needs the wireless fleet (topo/fleet/lp)")
         self._codec = None
         self.ledger = None
         self._probe = None
@@ -471,6 +493,15 @@ class SimEngine:
             self._rounds_part = self._rounds_seen = None
         self.obs.reset_run()
         self._setup_measured(state)
+        if getattr(sync_step, "hier", False):
+            if self.hfl is None:
+                # null-wireless adapter (core.schedule.run_hfl): adopt the
+                # tiered sync's own config for the hierarchy bookkeeping
+                self.hfl = sync_step.cfg
+            if any(tc.discipline == "async" for tc in self.hfl.tiers[1:]):
+                # mixed-discipline hierarchy: the async tier owns the clock
+                return self._run_hier_async(state, train_step, sync_step,
+                                            batches, num_steps, on_step)
         disc = self.sim.discipline
         if disc in ("lockstep", "deadline"):
             return self._run_lockstep(
@@ -516,10 +547,10 @@ class SimEngine:
             registry=self.obs.registry if self.obs.enabled else None)
         self._probe = acct.make_sync_probe(self.hfl, self._codec)
         self._ab = {
-            "mu_ul": acct.access_bits(self._codec, Q, self.hfl.phi_mu_ul),
-            "sbs_dl": acct.access_bits(self._codec, Q, self.hfl.phi_sbs_dl),
-            "sbs_ul": acct.access_bits(self._codec, Q, self.hfl.phi_sbs_ul),
-            "mbs_dl": acct.access_bits(self._codec, Q, self.hfl.phi_mbs_dl),
+            "mu_ul": acct.access_bits(self._codec, Q, self.hfl.tiers[0].phi_up),
+            "sbs_dl": acct.access_bits(self._codec, Q, self.hfl.tiers[0].phi_down),
+            "sbs_ul": acct.access_bits(self._codec, Q, self.hfl.tiers[1].phi_up),
+            "mbs_dl": acct.access_bits(self._codec, Q, self.hfl.tiers[1].phi_down),
             # the async dense adoption ships the raw reference: price it as
             # dense-f32 regardless of the (sparse) codec in use
             "dense": acct.access_bits("dense-f32", Q, 0.0),
@@ -543,8 +574,8 @@ class SimEngine:
         return fn(
             self.topo, self.fleet.pos, self.fleet.cid, self.lp,
             H=self.period,
-            phi_mu_ul=self.hfl.phi_mu_ul, phi_sbs_dl=self.hfl.phi_sbs_dl,
-            phi_sbs_ul=self.hfl.phi_sbs_ul, phi_mbs_dl=self.hfl.phi_mbs_dl,
+            phi_mu_ul=self.hfl.tiers[0].phi_up, phi_sbs_dl=self.hfl.tiers[0].phi_down,
+            phi_sbs_ul=self.hfl.tiers[1].phi_up, phi_mbs_dl=self.hfl.tiers[1].phi_down,
             reuse=self.sim.reuse,
             payload_bits=self._payload_overrides(),
         )
@@ -580,7 +611,7 @@ class SimEngine:
                  else fl_latency)
         t_fl, _ = fl_fn(
             self.topo, self.fleet.pos, self.lp,
-            phi_ul=self.hfl.phi_mu_ul, phi_dl=self.hfl.phi_mbs_dl,
+            phi_ul=self.hfl.tiers[0].phi_up, phi_dl=self.hfl.tiers[1].phi_down,
             ul_bits=None if pb is None else pb["mu_ul"],
             dl_bits=None if pb is None else pb["mbs_dl"],
         )
@@ -624,9 +655,13 @@ class SimEngine:
             # stream (and thus every other cluster's trajectory) is
             # untouched — the faulted cluster's members just never come up
             avail = avail & (cid != fault)
+        if self.selector is not None:
+            # participation cap AFTER the availability/fault draws (the
+            # selector only ever shrinks the mask, from its own RNG stream)
+            avail = self.selector.select(avail, self.fleet, self._vt)
         N = hfl.num_clusters
         ul_pay = (float(self._ab["mu_ul"]) if self.ledger is not None
-                  else lp.payload(hfl.phi_mu_ul))
+                  else lp.payload(hfl.tiers[0].phi_up))
 
         # per-MU round time: H iterations of own compute + own UL + cluster DL
         rate_flat = aux["mu_rate_flat"]
@@ -925,8 +960,8 @@ class SimEngine:
             )
         else:
             lp, hfl = self.lp, self.hfl
-            ul = p * lp.payload(hfl.phi_mu_ul)
-            dl = clusters * lp.payload(hfl.phi_sbs_dl)
+            ul = p * lp.payload(hfl.tiers[0].phi_up)
+            dl = clusters * lp.payload(hfl.tiers[0].phi_down)
         self._bits_access += ul + dl
         return ul, dl
 
@@ -936,8 +971,64 @@ class SimEngine:
         if not self.wireless:
             return 0.0, 0.0
         lp, hfl = self.lp, self.hfl
-        ul = clusters * lp.payload(hfl.phi_sbs_ul)
-        dl = lp.payload(hfl.phi_mbs_dl)
+        ul = clusters * lp.payload(hfl.tiers[1].phi_up)
+        dl = lp.payload(hfl.tiers[1].phi_down)
+        self._bits_fronthaul += ul + dl
+        return ul, dl
+
+    def _count_sync_hier(self, top: int):
+        """Analytic fronthaul charge of one tiered-consensus boundary up to
+        tier ``top`` -> ``(ul_bits, dl_bits)``: each firing tier t prices
+        ``A_{t-1}`` child uplinks at its ``phi_up`` and ``A_t`` parent
+        downlinks at its ``phi_down`` (the depth-2 ``top=1`` instance is
+        exactly ``_count_sync(N)``)."""
+        self._sync_launches += 1
+        if not self.wireless:
+            return 0.0, 0.0
+        lp, hfl = self.lp, self.hfl
+        ul = dl = 0.0
+        for ti in range(1, top + 1):
+            tc = hfl.tiers[ti]
+            ul += hfl.agg_count(ti - 1) * lp.payload(tc.phi_up)
+            dl += hfl.agg_count(ti) * lp.payload(tc.phi_down)
+        self._bits_fronthaul += ul + dl
+        return ul, dl
+
+    def _hier_sync_extra_s(self, top: int) -> float:
+        """Serial fronthaul time the tiers ABOVE the SBS ring add to one
+        boundary (tier 1's θ^U/θ^D already live in ``ctx['sync_s']``):
+        every extra hop ships its Ω payload pair over the fronthaul rate."""
+        if not self.wireless or top < 2:
+            return 0.0
+        aux = self._latency_aux()
+        lp, hfl = self.lp, self.hfl
+        extra = 0.0
+        for ti in range(2, top + 1):
+            tc = hfl.tiers[ti]
+            extra += (lp.payload(tc.phi_up) + lp.payload(tc.phi_down)) \
+                / aux["fh_rate"]
+        return extra
+
+    def _count_sync_edge(self, fanout: int):
+        """Analytic fronthaul charge of ONE edge's tier-1 consensus."""
+        self._sync_launches += 1
+        if not self.wireless:
+            return 0.0, 0.0
+        t1 = self.hfl.tiers[1]
+        ul = fanout * self.lp.payload(t1.phi_up)
+        dl = self.lp.payload(t1.phi_down)
+        self._bits_fronthaul += ul + dl
+        return ul, dl
+
+    def _count_sync_root(self):
+        """Analytic fronthaul charge of one async root push: Ω uplink at
+        the root tier's ``phi_up``, dense reference adoption downlink."""
+        self._sync_launches += 1
+        if not self.wireless:
+            return 0.0, 0.0
+        t2 = self.hfl.tiers[-1]
+        ul = self.lp.payload(t2.phi_up)
+        dl = self.lp.payload(0.0)  # dense adoption ships the raw reference
         self._bits_fronthaul += ul + dl
         return ul, dl
 
@@ -1071,6 +1162,10 @@ class SimEngine:
         # propagates the flag onto the jitted callable)
         stats_on = (self.obs.health.enabled
                     and bool(getattr(sync_step, "collect_stats", False)))
+        # depth > 2: the tiered sync threads its own side buffers and fires
+        # a variable-height boundary (hier_fire_top) each period
+        hier = bool(getattr(sync_step, "hier", False))
+        hbufs = sync_step.init_bufs(state) if hier else None
         for step in range(num_steps):
             if step % H == 0:
                 # _round_ctx draws the slot sources itself (residency runs)
@@ -1118,7 +1213,13 @@ class SimEngine:
                 row_extra = {}
                 sync_ul = sync_dl = 0.0
                 bcast_b = fh_parts = None
-                if self.ledger is not None:
+                top = None
+                if hier:
+                    top = sync_step.fire_top((step + 1) // H)
+                    sync_ul, sync_dl = self._count_sync_hier(top)
+                    sync_s += self._hier_sync_extra_s(top)
+                    row_extra = {"tier": int(top)}
+                elif self.ledger is not None:
                     # measure the REAL fronthaul payloads this sync sends
                     # (before the donating sync step consumes the state)
                     # and re-price θ^U/θ^D from the actual bit counts
@@ -1160,7 +1261,9 @@ class SimEngine:
                     sync_ul, sync_dl = self._count_sync(
                         N if N is not None else 1)
                 with self.obs.host_span("sync_step"):
-                    if stats_on:
+                    if hier:
+                        state, hbufs = sync_step(state, hbufs, top)
+                    elif stats_on:
                         state, sstats = sync_step(state)
                     else:
                         state = sync_step(state)
@@ -1283,6 +1386,10 @@ class SimEngine:
                 if avail is None:
                     avail = np.ones(self.fleet.K, bool)
                 avail = avail & (self.fleet.cid != fault)
+            if self.selector is not None:
+                if avail is None:
+                    avail = np.ones(self.fleet.K, bool)
+                avail = self.selector.select(avail, self.fleet, t)
             if self.residency is not None:
                 src = self._slot_sources(avail)
                 # resident/survivor counts as boolean row sums (the member
@@ -1476,6 +1583,163 @@ class SimEngine:
                 q.push(t + self._cluster_round_time(n, comp),
                        Event("cluster_done", cluster=n, round=ev.round + 1))
             round_t0[n] = t
+            self.obs.tick()
+        self._finish_run()
+        trace.meta.update(self._totals())
+        return state, trace
+
+    # --- mixed-discipline hierarchy (depth 3, async root) ------------------
+
+    def _run_hier_async(self, state, train_step, sync_step, batches,
+                        num_steps, on_step):
+        """Depth-3 hierarchy with an async root tier: each tier-1
+        aggregator ("edge") runs lockstep tier-1 rounds on its own clock —
+        H intra-cluster iterations of ITS clusters, then the edge's group
+        consensus — and every ``tiers[2].period`` edge-rounds pushes its
+        reference to the root with a staleness-discounted weight
+        (``async_weight`` over the E edges). The tiers below the async
+        boundary keep their lockstep semantics; only the root exchange is
+        clock-free, so straggler edges never stall the fleet.
+        """
+        hfl = self.hfl
+        tiers = hfl.tiers
+        if len(tiers) != 3 or tiers[2].discipline != "async":
+            raise ValueError(
+                "mixed-discipline hierarchies support depth 3 with an "
+                "async ROOT tier only (tiers[2].discipline='async')")
+        if self.residency is not None or self._oversub:
+            raise ValueError(
+                "the async-root hierarchy does not support residency "
+                "tracking or oversubscribed fleets yet")
+        H = self.period
+        N = hfl.num_clusters
+        E = hfl.agg_count(1)   # tier-1 aggregators ("edges")
+        G = tiers[1].fanout    # clusters per edge
+        H2 = tiers[2].period   # edge-rounds between root pushes
+        mpc = hfl.mus_per_cluster
+        rounds = num_steps // H
+        trace = Trace(meta=self._meta())
+        trace.meta["hier_depth"] = len(tiers)
+        if rounds == 0:
+            trace.meta.update(self._totals())
+            return state, trace
+        it = iter(batches)
+        q = EventQueue()
+        bufs = sync_step.init_bufs(state)
+        edge_sync, root_push = sync_step.edge_ops()
+        comp = (self.fleet.compute_times(self.sim.base_compute_s)
+                if self.fleet is not None else None)
+
+        def edge_rt(e: int) -> float:
+            crt = self._cluster_round_times(comp)
+            return float(crt[e * G:(e + 1) * G].max())
+
+        for e in range(E):
+            q.push(edge_rt(e), Event("edge_done", cluster=e, round=0))
+        root_updates = 0
+        last_pull = [0] * E
+        steps_done = 0
+        fleet_time = 0.0
+        round_t0 = np.zeros(E)
+        while len(q):
+            t, ev = q.pop()
+            e = ev.cluster
+            if self.fleet is not None and self.fleet.mobile:
+                self._advance_fleet(t - fleet_time, now=t)
+                fleet_time = t
+            self._vt = t
+            avail = (self.fleet.draw_available(t)
+                     if self.fleet is not None and self.fleet.dropout > 0
+                     else None)
+            fault = getattr(self.sim, "fault_dead_cluster", None)
+            if fault is not None and self.fleet is not None:
+                if avail is None:
+                    avail = np.ones(self.fleet.K, bool)
+                avail = avail & (self.fleet.cid != fault)
+            if self.selector is not None:
+                if avail is None:
+                    avail = np.ones(self.fleet.K, bool)
+                avail = self.selector.select(avail, self.fleet, t)
+            edge_clusters = np.zeros(N, bool)
+            edge_clusters[e * G:(e + 1) * G] = True
+            mask = None
+            dropped = 0
+            slots = slice(e * G * mpc, (e + 1) * G * mpc)
+            if avail is not None:
+                mask = None if avail.all() else avail
+                dropped = int((~avail[slots]).sum())
+            # clusters in the edge with at least one participant update;
+            # the rest (and every other edge) keep their state untouched
+            keep = edge_clusters
+            if mask is not None:
+                keep = edge_clusters & mask.reshape(N, mpc).any(axis=1)
+            participants = (int(avail[slots].sum()) if avail is not None
+                            else G * mpc)
+            # step-indexed LR schedules follow THIS edge's round progress,
+            # same contract as the flat async loop
+            state = state._replace(
+                step=jnp.asarray(ev.round * H, jnp.int32))
+            loss = None
+            for _h in range(H):
+                batch = self._apply_participation(next(it), mask)
+                with self.obs.host_span("train_step"):
+                    new_state, loss = train_step(state, batch)
+                state = _merge_clusters(state, new_state, keep)
+                steps_done += 1
+                self._count_train(participants, int(keep.sum()))
+            # tier-1 consensus of this edge only
+            with self.obs.host_span("sync_step"):
+                state, bufs = edge_sync(state, bufs, e)
+            s_ul, s_dl = self._count_sync_edge(G)
+            loss_e = float(jnp.mean(loss) if jnp.ndim(loss) == 0
+                           else jnp.mean(loss[e * G:(e + 1) * G]))
+            if self.obs.enabled:
+                self.obs.tracer.span(
+                    "round", track=f"edge{e}", t0=round_t0[e],
+                    dur=t - round_t0[e],
+                    args={"round": int(ev.round), "dropped": dropped})
+            for c in range(e * G, (e + 1) * G):
+                self._mark_round(c, bool(keep[c]), t)
+            if self._record:
+                trace.add(kind="sync", t=t, step=steps_done - 1, tier=1,
+                          edge=int(e), round=int(ev.round),
+                          dropped=dropped, loss=loss_e,
+                          bits_ul=s_ul, bits_dl=s_dl)
+            self.obs.health.ingest_loss(loss_e, t=t)
+            if (ev.round + 1) % H2 == 0:
+                # async root push: staleness counts the root updates other
+                # edges landed since this edge last pulled the reference
+                staleness = root_updates - last_pull[e]
+                w = async_weight(staleness, E, self.sim.staleness_exp)
+                with self.obs.host_span("sync_step"):
+                    state, bufs = root_push(state, bufs, e, w)
+                root_updates += 1
+                last_pull[e] = root_updates
+                r_ul, r_dl = self._count_sync_root()
+                t_push = 0.0
+                if self.wireless:
+                    aux = self._latency_aux()
+                    t_push = (r_ul + r_dl) / aux["fh_rate"]
+                t += t_push
+                if self.obs.enabled:
+                    self.obs.registry.histogram("sim.staleness").observe(
+                        float(staleness), cluster=f"e{e}")
+                    self.obs.tracer.span(
+                        "sync", track=f"edge{e}", t0=t - t_push, dur=t_push,
+                        args={"round": int(ev.round), "tier": 2,
+                              "staleness": int(staleness),
+                              "weight": float(w)})
+                if self._record:
+                    trace.add(kind="sync", t=t, step=steps_done - 1, tier=2,
+                              edge=int(e), round=int(ev.round),
+                              staleness=int(staleness), weight=float(w),
+                              bits_ul=r_ul, bits_dl=r_dl)
+            if on_step is not None:
+                on_step(steps_done - 1, state, loss)
+            if ev.round + 1 < rounds:
+                q.push(t + edge_rt(e),
+                       Event("edge_done", cluster=e, round=ev.round + 1))
+            round_t0[e] = t
             self.obs.tick()
         self._finish_run()
         trace.meta.update(self._totals())

@@ -50,7 +50,7 @@ class LegacySimEngine(SimEngine):
         avail = self.fleet.draw_available()
         K, N = self.fleet.K, hfl.num_clusters
         ul_pay = (float(self._ab["mu_ul"]) if self.ledger is not None
-                  else lp.payload(hfl.phi_mu_ul))
+                  else lp.payload(hfl.tiers[0].phi_up))
 
         # per-MU round time: H iterations of own compute + own UL + cluster DL
         r = np.full(K, np.inf)

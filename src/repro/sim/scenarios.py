@@ -44,6 +44,14 @@ Each scenario bundles a ``SimConfig`` (fleet + discipline knobs) with the
                       aggregates only, silently no training —
                       ``run_scale_sampling`` keeps that sweep available
                       as an explicit function call.)
+  * ``hier-3tier``  — depth-3 hierarchy (MU → SBS → edge → cloud):
+                      the tiered cascade fires tier 1 every period and the
+                      root every ``tiers[2].period`` rounds, with per-tier
+                      Ω/error-feedback and per-tier fronthaul pricing.
+  * ``prate-biased`` — paper-fig3 layout with ``prate=0.5`` rate-biased
+                      client selection: each round only the fastest half
+                      of every cell trains, cutting measured access-UL
+                      bits roughly in half vs full participation.
 """
 from __future__ import annotations
 
@@ -187,6 +195,31 @@ SCENARIOS = {
         note="DEPRECATED alias of the scale-1m live path at 105k MUs "
              "(the old aggregate-only sampling is run_scale_sampling)",
     ),
+    "hier-3tier": Scenario(
+        name="hier-3tier", kind="train",
+        sim=SimConfig(scenario="hier-3tier", discipline="lockstep"),
+        # MU -> SBS -> edge -> cloud: 2 edges x 2 SBS x 4 MUs. Tier 1
+        # consensus every 2 iterations, the root every 2 tier-1 rounds;
+        # each hop runs its own Omega/error-feedback at the paper's phi.
+        hfl=dict(sync_mode="sparse", tiers=(
+            dict(fanout=4, period=1, phi_up=0.99, phi_down=0.9),
+            dict(fanout=2, period=2, phi_up=0.9, phi_down=0.9,
+                 beta_up=0.5, beta_down=0.2),
+            dict(fanout=2, period=2, phi_up=0.9, phi_down=0.9,
+                 beta_up=0.5, beta_down=0.2),
+        )),
+        note="depth-3 tiered consensus: 2 edges x 2 SBS x 4 MUs, root "
+             "fires every 2 tier-1 rounds, per-tier fronthaul pricing",
+    ),
+    "prate-biased": Scenario(
+        name="prate-biased", kind="train",
+        sim=SimConfig(scenario="prate-biased", discipline="lockstep",
+                      compute_sigma=0.5, prate=0.5, selection="biased"),
+        hfl=dict(num_clusters=7, mus_per_cluster=4, period=2,
+                 sync_mode="sparse", **PAPER_PHIS),
+        note="paper-fig3 layout, prate=0.5 rate-biased selection: the "
+             "fastest half of each cell trains; access-UL bits halve",
+    ),
 }
 
 
@@ -287,7 +320,7 @@ def build_engine(
         tracker = ResidencyTracker(fleet.cid, hfl_cfg.num_clusters,
                                    policy=sim.residency)
     return engine_cls(
-        period=hfl_cfg.period, hfl_cfg=hfl_cfg, sim_cfg=sim,
+        period=hfl_cfg.tiers[1].period, hfl_cfg=hfl_cfg, sim_cfg=sim,
         topo=topo, fleet=fleet, lp=lp if lp is not None else LatencyParams(),
         residency=tracker,
     )

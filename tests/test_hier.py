@@ -1,0 +1,428 @@
+"""Arbitrary-depth hierarchy: TierConfig API + deprecation shims, the
+``--tiers`` spec grammar, the per-tier consensus cascade (lockstep and
+async-mixed), per-tier fronthaul accounting, and client-selection
+policies. The depth-2 path must stay bit-identical to the legacy scalar
+config — the engine-equivalence test here is the in-suite twin of CI's
+paper-fig3 golden gate."""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.core.hfl as hfl_mod
+from repro.configs.base import (
+    DEFAULT_TIERS,
+    HFLConfig,
+    SimConfig,
+    TierConfig,
+    _reset_legacy_hfl_warnings,
+    parse_tiers_spec,
+    warn_legacy_cli_flag,
+)
+from repro.core.hfl import (
+    SyncPlan,
+    hfl_init,
+    hier_fire_top,
+    make_cluster_train_step,
+    make_sync,
+    make_sync_step,
+)
+from repro.optim import SGDM
+from repro.sim.devices import DeviceFleet
+from repro.sim.scenarios import apply_hfl_overrides, build_engine, get_scenario
+from repro.sim.selection import ClientSelector, make_selector
+from repro.wireless.latency import LatencyParams
+from repro.wireless.topology import HCNTopology
+
+D = 12
+
+
+def _quad_loss(params, batch):
+    return jnp.mean((params["w"][None, :] - batch) ** 2), {}
+
+
+def _setup(hfl, lr=0.2):
+    params = {"w": jnp.zeros((D,), jnp.float32)}
+    opt = SGDM(momentum=0.0)
+    state = hfl_init(params, opt, hfl)
+    train = jax.jit(make_cluster_train_step(_quad_loss, opt, lambda t: lr))
+    sync = make_sync(SyncPlan.from_config(hfl))
+    return state, train, sync
+
+
+def _mu_batches(hfl, bpm=2, seed=1):
+    rng = np.random.default_rng(seed)
+    N, mpc = hfl.num_clusters, hfl.mus_per_cluster
+
+    def gen():
+        while True:
+            base = np.arange(N * mpc, dtype=np.float32).reshape(N, mpc, 1, 1)
+            noise = rng.normal(scale=0.01, size=(N, mpc, bpm, D))
+            yield jnp.asarray(
+                (base + noise).reshape(N, mpc * bpm, D).astype(np.float32))
+
+    return gen()
+
+
+# ---------------------------------------------------------------------------
+# --tiers spec grammar + TierConfig surface
+# ---------------------------------------------------------------------------
+
+
+def test_parse_tiers_spec_depth2_matches_defaults():
+    # "1x4:H=4" is the old --clusters 1 --mus 4 --period 4 — and the
+    # parser's per-level defaults ARE the historical DEFAULT_TIERS
+    assert parse_tiers_spec("1x4:H=4") == DEFAULT_TIERS
+    t = parse_tiers_spec("3x2")
+    assert len(t) == 2 and t[0].fanout == 2 and t[1].fanout == 3
+    assert t[1].period == 1  # omitted H defaults every tier to period 1
+    cfg = HFLConfig(tiers=parse_tiers_spec("7x4:H=2"))
+    assert (cfg.num_clusters, cfg.mus_per_cluster) == (7, 4)
+    assert cfg.tiers[1].period == 2
+
+
+def test_parse_tiers_spec_depth3_async():
+    t = parse_tiers_spec("2x4x2:H=2,3:async")
+    assert [tc.fanout for tc in t] == [2, 4, 2]  # bottom-up
+    assert [tc.period for tc in t] == [1, 2, 3]
+    assert t[2].discipline == "async" and t[1].discipline == "lockstep"
+    cfg = HFLConfig(tiers=t)
+    assert cfg.depth == 3 and cfg.num_clusters == 8 and cfg.total_mus == 16
+    assert cfg.agg_count(1) == 2 and cfg.agg_count(2) == 1
+
+
+@pytest.mark.parametrize("bad", [
+    "", "4", "ax2", "4x2:H=x", "4x2:H=1,2", "4x2:frobnicate",
+])
+def test_parse_tiers_spec_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_tiers_spec(bad)
+
+
+def test_tier_config_validates_discipline():
+    with pytest.raises(ValueError):
+        TierConfig(fanout=2, discipline="chaotic")
+
+
+def test_legacy_kwargs_reshape_tiers_without_warning():
+    _reset_legacy_hfl_warnings()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # constructing must NOT warn
+        cfg = HFLConfig(num_clusters=3, mus_per_cluster=2, period=5,
+                        phi_mu_ul=0.5, beta_s=0.25)
+    assert cfg.tiers[0].fanout == 2 and cfg.tiers[0].phi_up == 0.5
+    assert cfg.tiers[1].fanout == 3 and cfg.tiers[1].period == 5
+    assert cfg.tiers[1].beta_up == 0.25
+    # untouched knobs keep the DEFAULT_TIERS values
+    assert cfg.tiers[1].phi_up == DEFAULT_TIERS[1].phi_up
+
+
+def test_legacy_kwargs_rejected_on_depth3():
+    with pytest.raises(ValueError, match="depth-3"):
+        HFLConfig(tiers=parse_tiers_spec("2x2x2"), period=4)
+    with pytest.raises(TypeError):
+        HFLConfig(frobnicate=1)
+
+
+def test_legacy_properties_round_trip_and_warn_once():
+    _reset_legacy_hfl_warnings()
+    cfg = HFLConfig(num_clusters=3, mus_per_cluster=2, period=5,
+                    phi_mu_ul=0.11, phi_sbs_dl=0.22, phi_sbs_ul=0.33,
+                    phi_mbs_dl=0.44, beta_s=0.5, beta_m=0.6)
+    expect = {"period": 5, "phi_mu_ul": 0.11, "phi_sbs_dl": 0.22,
+              "phi_sbs_ul": 0.33, "phi_mbs_dl": 0.44,
+              "beta_s": 0.5, "beta_m": 0.6}
+    for name, val in expect.items():
+        with pytest.warns(DeprecationWarning, match=name):
+            assert getattr(cfg, name) == val
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # second read: warn-once, silent
+        for name, val in expect.items():
+            assert getattr(cfg, name) == val
+    # geometry accessors are canonical — never warn
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert cfg.num_clusters == 3 and cfg.mus_per_cluster == 2
+        assert cfg.depth == 2 and cfg.total_mus == 6
+
+
+def test_legacy_properties_undefined_beyond_depth2():
+    cfg = HFLConfig(tiers=parse_tiers_spec("2x2x2"))
+    with pytest.raises(AttributeError, match="depth-3"):
+        cfg.period
+
+
+def test_legacy_cli_flag_warns_once():
+    _reset_legacy_hfl_warnings()
+    with pytest.warns(DeprecationWarning, match="--clusters"):
+        warn_legacy_cli_flag("--clusters", "--tiers")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        warn_legacy_cli_flag("--clusters", "--tiers")  # silent now
+    with pytest.warns(DeprecationWarning, match="--period"):
+        warn_legacy_cli_flag("--period", "--tiers")  # distinct flag warns
+
+
+# ---------------------------------------------------------------------------
+# SyncPlan + deprecated make_sync_step wrapper
+# ---------------------------------------------------------------------------
+
+
+def test_make_sync_step_deprecated_wrapper_bit_identical():
+    hfl = HFLConfig(num_clusters=3, mus_per_cluster=2, period=2,
+                    sync_mode="sparse")
+    state, _, sync_new = _setup(hfl)
+    state = state._replace(params=jax.tree.map(
+        lambda p: p + jnp.arange(p.shape[0], dtype=p.dtype)[
+            (...,) + (None,) * (p.ndim - 1)], state.params))
+    hfl_mod._make_sync_step_warned = False
+    with pytest.warns(DeprecationWarning, match="make_sync_step"):
+        sync_old = make_sync_step(hfl, mesh=None)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        make_sync_step(hfl, mesh=None)  # warn-once
+    out_new, out_old = sync_new(state), sync_old(state)
+    for a, b in zip(jax.tree.leaves(out_new.params),
+                    jax.tree.leaves(out_old.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_make_sync_depth3_rejects_unsupported_modes():
+    cfg = HFLConfig(tiers=parse_tiers_spec("2x2x2"), sync_mode="sparse")
+    with pytest.raises(ValueError, match="mesh"):
+        make_sync(SyncPlan.from_config(cfg, mesh=object()))
+    with pytest.raises(ValueError):
+        make_sync(SyncPlan.from_config(cfg, collect_stats=True))
+
+
+# ---------------------------------------------------------------------------
+# Depth-2 bit-identity through the tier redesign
+# ---------------------------------------------------------------------------
+
+
+def _run_paper_fig3(hfl, steps=8):
+    scn = get_scenario("paper-fig3")
+    engine = build_engine(scn, hfl, lp=LatencyParams(model_params=1e5),
+                          seed=0)
+    state, train, sync = _setup(hfl)
+    state, trace = engine.run(state, train, sync, _mu_batches(hfl), steps)
+    return state, trace
+
+
+def test_depth2_engine_bit_identical_legacy_vs_tiers():
+    """The explicit-tiers spelling of paper-fig3 replays the legacy scalar
+    spelling bit-for-bit: same event log, same fronthaul bits, same final
+    weights — the redesign is a pure re-parameterization at depth 2."""
+    scn = get_scenario("paper-fig3")
+    legacy = apply_hfl_overrides(scn, HFLConfig())
+    explicit = HFLConfig(tiers=(
+        TierConfig(fanout=4, period=1, phi_up=0.99, phi_down=0.9),
+        TierConfig(fanout=7, period=2, phi_up=0.9, phi_down=0.9,
+                   beta_up=0.5, beta_down=0.2),
+    ), sync_mode="sparse")
+    assert explicit.tiers == legacy.tiers
+    s1, t1 = _run_paper_fig3(legacy)
+    s2, t2 = _run_paper_fig3(explicit)
+    assert t1.rows == t2.rows
+    assert t1.meta == t2.meta
+    np.testing.assert_array_equal(np.asarray(s1.params["w"]),
+                                  np.asarray(s2.params["w"]))
+    # depth-2 sync events carry NO tier key: the historical event-log
+    # schema (and the committed golden) is unchanged
+    syncs = [r for r in t1.rows if r["kind"] == "sync"]
+    assert syncs and all("tier" not in r for r in syncs)
+
+
+# ---------------------------------------------------------------------------
+# Depth-3 tiered consensus
+# ---------------------------------------------------------------------------
+
+
+def test_hier_fire_top_cadence():
+    tiers = parse_tiers_spec("2x2x2:H=2,2")
+    # tier 2 fires every tiers[2].period = 2 tier-1 rounds
+    assert [hier_fire_top(tiers, r) for r in range(1, 7)] == [1, 2, 1, 2, 1, 2]
+    t4 = parse_tiers_spec("2x2x2x2:H=1,2,2")
+    # depth 4: tier-3 stride compounds to 2*2 = 4 tier-1 rounds
+    assert [hier_fire_top(t4, r) for r in range(1, 9)] == [
+        1, 2, 1, 3, 1, 2, 1, 3]
+
+
+def test_3tier_lockstep_per_tier_accounting():
+    scn = get_scenario("hier-3tier")
+    hfl = apply_hfl_overrides(scn, HFLConfig())
+    assert hfl.depth == 3
+    lp = LatencyParams(model_params=1e5)
+    engine = build_engine(scn, hfl, lp=lp, seed=0)
+    state, train, sync = _setup(hfl)
+    state, trace = engine.run(state, train, sync, _mu_batches(hfl), 8)
+    syncs = [r for r in trace.rows if r["kind"] == "sync"]
+    # H=2 over 8 steps -> 4 boundaries; the root (period 2) fires on
+    # every second one
+    assert [r["tier"] for r in syncs] == [1, 2, 1, 2]
+    assert [r["step"] for r in syncs] == [1, 3, 5, 7]
+    # a root boundary ships two extra Omega hops over the fronthaul:
+    # longer sync_s than a tier-1-only boundary, same iter pricing
+    t1_s = min(r["sync_s"] for r in syncs if r["tier"] == 2)
+    t0_s = max(r["sync_s"] for r in syncs if r["tier"] == 1)
+    assert t1_s > t0_s
+    # analytic per-tier fronthaul bits: every boundary prices tier 1
+    # (A0 uplinks + A1 downlinks); a root boundary adds tier 2
+    per_t1 = (hfl.agg_count(0) * lp.payload(hfl.tiers[1].phi_up)
+              + hfl.agg_count(1) * lp.payload(hfl.tiers[1].phi_down))
+    per_t2 = (hfl.agg_count(1) * lp.payload(hfl.tiers[2].phi_up)
+              + hfl.agg_count(2) * lp.payload(hfl.tiers[2].phi_down))
+    expect = 4 * per_t1 + 2 * per_t2
+    assert trace.meta["bits_fronthaul_total"] == pytest.approx(expect)
+    # the run ends on a root boundary: dense reference adoption leaves
+    # every cluster bit-identical
+    w = np.asarray(state.params["w"])
+    assert np.abs(w - w[0]).max() == 0.0
+
+
+def test_3tier_async_mixed_edges_run_on_own_clocks():
+    scn = get_scenario("hier-3tier")
+    base = apply_hfl_overrides(scn, HFLConfig())
+    hfl = dataclasses.replace(base, tiers=(
+        base.tiers[0], base.tiers[1],
+        dataclasses.replace(base.tiers[2], discipline="async")))
+    # skewed compute so the two edges genuinely desynchronize
+    scn = dataclasses.replace(
+        scn, sim=dataclasses.replace(scn.sim, compute_sigma=0.6))
+    engine = build_engine(scn, hfl, lp=LatencyParams(model_params=1e5),
+                          seed=0)
+    state, train, sync = _setup(hfl)
+    state, trace = engine.run(state, train, sync, _mu_batches(hfl), 8)
+    assert trace.meta["hier_depth"] == 3
+    syncs = [r for r in trace.rows if r["kind"] == "sync"]
+    edge_rows = [r for r in syncs if r["tier"] == 1]
+    root_rows = [r for r in syncs if r["tier"] == 2]
+    E, rounds = hfl.agg_count(1), 8 // hfl.tiers[1].period
+    assert len(edge_rows) == E * rounds
+    # every edge completed its own rounds 0..rounds-1
+    for e in range(E):
+        assert sorted(r["round"] for r in edge_rows
+                      if r["edge"] == e) == list(range(rounds))
+    # root pushes every tiers[2].period edge-rounds, staleness-weighted
+    assert len(root_rows) == E * (rounds // hfl.tiers[2].period)
+    for r in root_rows:
+        assert r["staleness"] >= 0 and 0.0 < r["weight"] <= 1.0
+    assert np.isfinite(np.asarray(state.params["w"])).all()
+    assert trace.meta["bits_fronthaul_total"] > 0
+
+
+def test_async_mixed_null_wireless_via_run_hfl():
+    """core.schedule.run_hfl (no fleet, no radio) drives the mixed
+    hierarchy too: the engine adopts the sync step's own config."""
+    from repro.core.schedule import run_hfl
+
+    hfl = HFLConfig(tiers=parse_tiers_spec("2x2x2:H=2,2:async"))
+    state, train, sync = _setup(hfl)
+    state = run_hfl(state, train, sync, _mu_batches(hfl),
+                    period=hfl.tiers[1].period, num_steps=8)
+    assert np.isfinite(np.asarray(state.params["w"])).all()
+
+
+def test_measured_accounting_rejected_beyond_depth2():
+    scn = get_scenario("hier-3tier")
+    hfl = apply_hfl_overrides(
+        scn, HFLConfig(payload_accounting="measured"))
+    with pytest.raises(ValueError, match="measured"):
+        build_engine(scn, hfl, lp=LatencyParams(model_params=1e5), seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Client-selection policies
+# ---------------------------------------------------------------------------
+
+
+def _fleet(num_clusters=2, mpc=4, sigma=0.5, seed=0):
+    topo = HCNTopology(num_clusters=num_clusters, seed=seed)
+    return DeviceFleet(topo, mpc, compute_sigma=sigma, seed=seed)
+
+
+def test_make_selector_identity_is_none():
+    hfl = HFLConfig(num_clusters=2, mus_per_cluster=4)
+    assert make_selector(hfl, SimConfig()) is None
+    assert make_selector(hfl, SimConfig(prate=0.5)) is not None
+    assert make_selector(hfl, SimConfig(selection="biased")) is not None
+    assert make_selector(None, None) is None
+
+
+def test_selector_validation():
+    hfl = HFLConfig(num_clusters=2, mus_per_cluster=4)
+    with pytest.raises(ValueError, match="policy"):
+        ClientSelector(hfl, SimConfig(selection="psychic"))
+    with pytest.raises(ValueError, match="prate"):
+        ClientSelector(hfl, SimConfig(prate=0.0))
+    with pytest.raises(ValueError, match="prate"):
+        ClientSelector(hfl, SimConfig(prate=1.5))
+
+
+def test_biased_selection_picks_fastest_members():
+    fleet = _fleet()
+    hfl = HFLConfig(num_clusters=2, mus_per_cluster=4)
+    sel = ClientSelector(hfl, SimConfig(prate=0.5, selection="biased"))
+    out = sel.select(None, fleet, 0.0)
+    for n in range(2):
+        members = fleet.cluster_members(n)
+        picked = [m for m in members if out[m]]
+        assert len(picked) == sel.cap(len(members)) == 2
+        fastest = members[np.argsort(
+            fleet.compute_mult[members], kind="stable")[:2]]
+        assert sorted(picked) == sorted(fastest.tolist())
+
+
+def test_uniform_selection_caps_and_is_reproducible():
+    fleet = _fleet()
+    hfl = HFLConfig(num_clusters=2, mus_per_cluster=4)
+    sim = SimConfig(prate=0.5, selection="uniform", seed=3)
+    o1 = ClientSelector(hfl, sim).select(None, fleet, 0.0)
+    o2 = ClientSelector(hfl, sim).select(None, fleet, 0.0)
+    np.testing.assert_array_equal(o1, o2)  # own seeded stream
+    for n in range(2):
+        members = fleet.cluster_members(n)
+        assert o1[members].sum() == 2
+    # selection only narrows availability, never resurrects a dead MU
+    avail = np.ones(fleet.K, bool)
+    avail[fleet.cluster_members(0)] = False
+    o3 = ClientSelector(hfl, sim).select(avail, fleet, 0.0)
+    assert not o3[fleet.cluster_members(0)].any()
+
+
+def test_kmeans_selection_spans_member_positions():
+    fleet = _fleet(mpc=6)
+    hfl = HFLConfig(num_clusters=2, mus_per_cluster=6)
+    sel = ClientSelector(hfl, SimConfig(prate=0.5, selection="kmeans"))
+    out = sel.select(None, fleet, 0.0)
+    for n in range(2):
+        members = fleet.cluster_members(n)
+        assert out[members].sum() == sel.cap(len(members)) == 3
+    assert not out[~np.isin(np.arange(fleet.K),
+                            np.concatenate([fleet.cluster_members(0),
+                                            fleet.cluster_members(1)]))].any()
+
+
+def test_prate_cuts_access_uplink_bits():
+    """The acceptance criterion: prate-biased measurably reduces access-UL
+    traffic vs the same scenario at full participation."""
+    scn = get_scenario("prate-biased")
+    hfl = apply_hfl_overrides(scn, HFLConfig())
+    full = dataclasses.replace(scn, sim=dataclasses.replace(
+        scn.sim, prate=1.0, selection="uniform"))
+
+    def run(s):
+        engine = build_engine(s, hfl, lp=LatencyParams(model_params=1e5),
+                              seed=0)
+        state, train, sync = _setup(hfl)
+        _, trace = engine.run(state, train, sync, _mu_batches(hfl), 4)
+        return trace.meta
+
+    t_sel, t_full = run(scn), run(full)
+    assert t_sel["bits_access_total"] < t_full["bits_access_total"]
+    # fronthaul consensus traffic is participation-independent
+    assert t_sel["bits_fronthaul_total"] == t_full["bits_fronthaul_total"]

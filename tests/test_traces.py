@@ -422,7 +422,7 @@ def test_deadline_round_prices_with_reclaimed_bandwidth():
     # recompute what the round would cost WITHOUT reclamation (pre-drop rates)
     aux = eng._latency_aux()
     comp = fleet.compute_times(sim.base_compute_s)
-    ul_pay = lp.payload(hfl.phi_mu_ul)
+    ul_pay = lp.payload(hfl.tiers[0].phi_up)
     old_it = 0.0
     for n in range(2):
         members = fleet.cluster_members(n)
@@ -559,7 +559,7 @@ def test_round_ctx_compute_follows_resident_shards():
     assert ctx["src"][1][0] == 0 and ctx["src"][0][0] == 1
     aux = eng._latency_aux()
     comp = fleet.compute_times(sim.base_compute_s)
-    ul_pay = lp.payload(hfl.phi_mu_ul)
+    ul_pay = lp.payload(hfl.tiers[0].phi_up)
     radio = [ul_pay / aux["mu_rates"][n].min() + aux["gamma_dl"][n]
              for n in (0, 1)]
     # resident pricing: the slow multiplier rides cluster 1's radio terms
