@@ -55,6 +55,11 @@ GATED_KEY_RES = (
     r"^t_ul_(worst|median)_s$",
     r"^bits_per_param(_mean)?$",
     r"^bits_(access|fronthaul)_total$",
+    # link-graph: per-tier-boundary measured bits — deterministic codec
+    # stream lengths, named by boundary (depth-2 historic names, then
+    # t{tier}_ul/dl above boundary 1)
+    r"^bits_(mu_ul|sbs_dl|sbs_ul|mbs_dl)$",
+    r"^bits_t\d+_(ul|dl)$",
     r"^flop_ratio$",
     # fused sync: traced launch counts are deterministic; the steady-state
     # wall-clock is gated as the SAME-RUN fused/topk-flat ratio (the two

@@ -92,6 +92,8 @@ def run(periods: int = 2, seed: int = 0):
         }))
     rows.append(("prate-selection", run_prate_selection(cfg, loss_fn, opt,
                                                         seed=seed)))
+    rows.append(("hier-3tier-measured", run_hier_measured(cfg, loss_fn, opt,
+                                                          seed=seed)))
     stats = run_scale_sampling(SCENARIOS["scale-100k"], lp=LatencyParams())
     rows.append(("scale-100k", {k: v for k, v in stats.items() if k != "scenario"}))
     rows.append(("scale-1m", run_scale_1m(cfg, loss_fn, opt, seed=seed)))
@@ -140,6 +142,52 @@ def run_prate_selection(cfg, loss_fn, opt, periods: int = 2, seed: int = 0):
             ful["bits_access_total"] / sel["bits_access_total"],
         "bits_fronthaul_total": sel["bits_fronthaul_total"],
     }
+
+
+def run_hier_measured(cfg, loss_fn, opt, periods: int = 2, seed: int = 0):
+    """Measured-bits leg of the depth-3 tree: ``hier-3tier`` rerun with
+    ``payload_accounting="measured"``, so every tier boundary's sync bits
+    come from the jitted per-tier ``HierBufs`` probe instead of the analytic
+    payload formula. The per-boundary link keys (``bits_sbs_ul`` ..
+    ``bits_t2_dl``) are deterministic codec stream lengths and gated by
+    ``check_regression``; the leg doubles as a bit-identity canary for the
+    link-graph scheduler — any drift in the recursive sync cadence moves an
+    ``events_*`` count or a ``bits_*`` key in the artifact."""
+    import dataclasses
+
+    from repro.comm import link_names
+
+    scn = SCENARIOS["hier-3tier"]
+    hfl = dataclasses.replace(
+        apply_hfl_overrides(scn, HFLConfig(num_clusters=4, mus_per_cluster=3,
+                                           period=4)),
+        payload_accounting="measured")
+    engine = build_engine(scn, hfl, seed=seed)
+    state = hfl_init(init_model(jax.random.PRNGKey(seed), cfg), opt, hfl)
+    train = jax.jit(make_cluster_train_step(loss_fn, opt, lambda t: 0.1))
+    sync = jit_sync_step(make_sync(SyncPlan.from_config(hfl)))
+    rng = np.random.default_rng(seed)
+    N, B = hfl.num_clusters, hfl.mus_per_cluster * 2
+
+    def batches():
+        while True:
+            toks = rng.integers(0, cfg.vocab_size, (N, B, 16))
+            yield {"tokens": jnp.asarray(toks)}
+
+    _, trace = engine.run(state, train, sync, batches(),
+                          periods * hfl.tiers[1].period)
+    m = trace.meta
+    row = {
+        "wallclock_s": trace.wallclock,
+        "per_period_s": trace.wallclock / periods,
+        "bits_access_total": m["bits_access_total"],
+        "bits_fronthaul_total": m["bits_fronthaul_total"],
+        "bits_per_param_mean": m.get("bits_per_param_mean"),
+    }
+    for link in link_names(len(hfl.tiers)):
+        row[f"bits_{link}"] = m[f"bits_{link}"]
+        row[f"events_{link}"] = m[f"events_{link}"]
+    return row
 
 
 def run_tracing_overhead(periods: int = 2, seed: int = 0):

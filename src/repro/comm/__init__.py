@@ -10,10 +10,12 @@ events with measured bits when ``HFLConfig.payload_accounting="measured"``.
 """
 from repro.comm.codecs import CODECS, Codec, get_codec, list_codecs
 from repro.comm.accounting import (
-    LINKS, PayloadLedger, access_bits, make_sync_probe,
+    LINKS, PayloadLedger, access_bits, boundary_links, link_names,
+    make_hier_sync_probe, make_sync_probe,
 )
 
 __all__ = [
     "CODECS", "Codec", "get_codec", "list_codecs",
-    "LINKS", "PayloadLedger", "access_bits", "make_sync_probe",
+    "LINKS", "PayloadLedger", "access_bits", "boundary_links",
+    "link_names", "make_hier_sync_probe", "make_sync_probe",
 ]

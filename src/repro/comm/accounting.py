@@ -36,7 +36,7 @@ from __future__ import annotations
 
 import warnings
 from dataclasses import dataclass, field
-from functools import lru_cache
+from functools import lru_cache, partial
 from typing import Dict
 
 import jax
@@ -50,6 +50,36 @@ ACCESS_LINKS = ("mu_ul", "sbs_dl")
 FRONTHAUL_LINKS = ("sbs_ul", "mbs_dl")
 
 
+def boundary_links(t: int) -> tuple:
+    """``(uplink, downlink)`` link names of tier boundary ``t``.
+
+    The link graph is keyed by (tier boundary, direction): boundary 0 is
+    the access hop (MU <-> cluster head), boundary ``t >= 1`` the fronthaul
+    hop between tier-``t-1`` aggregators and their tier-``t`` parents.
+    Boundaries 0 and 1 keep the paper's historical names (``mu_ul`` /
+    ``sbs_dl`` / ``sbs_ul`` / ``mbs_dl``) so depth-2 ledger snapshots,
+    metrics-registry labels and trace tracks stay byte-compatible; deeper
+    boundaries use the generic ``t{t}_ul`` / ``t{t}_dl`` scheme.
+    """
+    if t == 0:
+        return ("mu_ul", "sbs_dl")
+    if t == 1:
+        return ("sbs_ul", "mbs_dl")
+    return (f"t{t}_ul", f"t{t}_dl")
+
+
+def link_names(depth: int) -> tuple:
+    """All link names of a depth-``depth`` hierarchy, boundary-major
+    (access first, then each fronthaul boundary bottom-up).
+
+    ``link_names(2) == LINKS``: the historical four-link ledger is the
+    depth-2 instance of the tier-boundary link graph."""
+    out = []
+    for t in range(depth):
+        out.extend(boundary_links(t))
+    return tuple(out)
+
+
 # ---------------------------------------------------------------------------
 # Ledger
 # ---------------------------------------------------------------------------
@@ -57,19 +87,33 @@ FRONTHAUL_LINKS = ("sbs_ul", "mbs_dl")
 
 @dataclass
 class PayloadLedger:
-    """Per-link measured-bit totals for one simulation run."""
+    """Per-link measured-bit totals for one simulation run.
+
+    ``links`` is the tier-boundary link graph the ledger accounts over —
+    :func:`link_names` of the hierarchy depth. The default is the
+    historical depth-2 four-link graph, so existing construction sites
+    and snapshots are unchanged; a deeper engine passes
+    ``links=link_names(len(tiers))`` and gets one ``bits_{l}`` /
+    ``events_{l}`` pair per boundary and direction."""
 
     codec: str
     size: int  # Q: flat model length the payloads index into
-    bits: Dict[str, float] = field(default_factory=lambda: {l: 0.0 for l in LINKS})
-    events: Dict[str, int] = field(default_factory=lambda: {l: 0 for l in LINKS})
+    links: tuple = LINKS
+    bits: Dict[str, float] = None
+    events: Dict[str, int] = None
     # live metrics mirror (repro.obs): when set, every record() also feeds
     # the ``comm.bits`` / ``comm.payloads`` counters, labelled by link
     registry: object = field(default=None, repr=False, compare=False)
 
+    def __post_init__(self):
+        if self.bits is None:
+            self.bits = {l: 0.0 for l in self.links}
+        if self.events is None:
+            self.events = {l: 0 for l in self.links}
+
     def record(self, link: str, bits, *, events: int = 1) -> float:
         if link not in self.bits:
-            raise KeyError(f"unknown link {link!r}; choose from {LINKS}")
+            raise KeyError(f"unknown link {link!r}; choose from {self.links}")
         b = float(bits)
         self.bits[link] += b
         self.events[link] += events
@@ -84,11 +128,12 @@ class PayloadLedger:
 
     @property
     def bits_fronthaul_total(self) -> float:
-        return sum(self.bits[l] for l in FRONTHAUL_LINKS)
+        # every non-access boundary is a fronthaul hop, whatever the depth
+        return sum(b for l, b in self.bits.items() if l not in ACCESS_LINKS)
 
     def summary(self) -> dict:
         out = {"codec": self.codec, "payload_size": self.size}
-        for l in LINKS:
+        for l in self.links:
             out[f"bits_{l}"] = self.bits[l]
             out[f"events_{l}"] = self.events[l]
         total_payloads = sum(self.events.values())
@@ -181,6 +226,91 @@ def make_sync_probe(hfl_cfg, codec: "str | Codec"):
         dvals, didx = sp.pack_phi(delta, hfl_cfg.tiers[1].phi_down, impl=impl)
         dl_bits = codec.measure_bits_jax(dvals, didx, Q)
         return jnp.stack(ul_bits), dl_bits
+
+    return probe
+
+
+def make_hier_sync_probe(hfl_cfg, codec: "str | Codec"):
+    """-> ``probe(state, bufs, top) -> (uls, dls)`` for depth > 2.
+
+    The per-tier twin of :func:`make_sync_probe`: recomputes exactly the
+    payload cascade ``core.hfl._hier_cascade`` is about to run over tiers
+    ``1..top`` (per-child drift + discounted error Ω uplinks, per-parent
+    group consensus Ω downlinks, with the live :class:`~repro.core.hfl.
+    HierBufs` references and error buffers) and measures every payload with
+    the codec's traced bit counter. ``uls[t-1]`` is the ``[A_{t-1}]`` array
+    of uplink bits crossing boundary ``t``; ``dls[t-1]`` the ``[A_t]``
+    array of downlink bits. One jitted program per distinct ``top``; the
+    probe does NOT donate (it runs before the donating sync step on the
+    same state, so probe payloads and wire payloads are identical traces
+    of identical inputs).
+    """
+    from repro.core import sparsify as sp
+    from repro.core.hfl import _wire_round, wire_format_of
+    from repro.utils import flatten as fl
+
+    codec = get_codec(codec) if isinstance(codec, str) else codec
+    impl = hfl_cfg.omega_impl
+    wire = wire_format_of(hfl_cfg)
+    tiers = hfl_cfg.tiers
+    T = len(tiers)
+    fns = {}
+
+    def _probe(state, bufs, *, top):
+        wn, _ = fl.pack_stacked(state.params)
+        eps1, _ = fl.pack_stacked(state.eps)
+        wref, ref_spec = fl.pack(state.w_ref)
+        e_root, _ = fl.pack(state.e)
+        Q = ref_spec.total
+
+        refs = list(bufs.refs)
+        epsu = [eps1] + list(bufs.eps)
+        errs = list(bufs.errs) + [e_root[None, :]]
+
+        child = wn
+        uls, dls = [], []
+        for t in range(1, top + 1):
+            tc = tiers[t]
+            A = hfl_cfg.agg_count(t)
+            G = tc.fanout
+            ref_t = refs[t - 1] if t <= T - 2 else wref[None, :]
+
+            s = child - jnp.repeat(ref_t, G, axis=0) + tc.beta_up * epsu[t - 1]
+            ub, sent_rows, eps_rows = [], [], []
+            for r in range(A * G):
+                vals, idx = sp.pack_phi(s[r], tc.phi_up, impl=impl)
+                if wire:
+                    vals = _wire_round(vals, wire)
+                ub.append(codec.measure_bits_jax(vals, idx, Q))
+                sent = sp.unpack_topk(vals, idx, Q)
+                sent_rows.append(sent)
+                eps_rows.append(s[r] - sent)
+            sent = jnp.stack(sent_rows).reshape(A, G, Q)
+            epsu[t - 1] = jnp.stack(eps_rows)
+
+            delta = sent.mean(axis=1) + tc.beta_down * errs[t - 1]
+            db, d_rows = [], []
+            for a in range(A):
+                dvals, didx = sp.pack_phi(delta[a], tc.phi_down, impl=impl)
+                if wire:
+                    dvals = _wire_round(dvals, wire)
+                db.append(codec.measure_bits_jax(dvals, didx, Q))
+                d_rows.append(sp.unpack_topk(dvals, didx, Q))
+            new_ref = ref_t + jnp.stack(d_rows)
+            if t <= T - 2:
+                refs[t - 1] = new_ref
+            child = new_ref
+            uls.append(jnp.stack(ub))
+            dls.append(jnp.stack(db))
+        return tuple(uls), tuple(dls)
+
+    def probe(state, bufs, top):
+        top = int(top)
+        fn = fns.get(top)
+        if fn is None:
+            fn = jax.jit(partial(_probe, top=top))
+            fns[top] = fn
+        return fn(state, bufs)
 
     return probe
 

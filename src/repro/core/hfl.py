@@ -920,82 +920,139 @@ def _hier_cascade(state: HFLState, bufs: HierBufs, *, hfl_cfg, top: int,
     return new_state, new_bufs
 
 
-def _hier_edge_sync(state: HFLState, bufs: HierBufs, *, hfl_cfg, e: int,
-                    wire):
-    """Tier-1 consensus of ONE edge (depth-3 async-mixed hierarchies):
-    edge ``e``'s clusters run the drift/Ω/error-feedback group sync against
-    the edge's own reference while every other edge's state is untouched —
-    the per-edge analogue of one ``top=1`` cascade boundary."""
-    t1 = hfl_cfg.tiers[1]
-    G = t1.fanout
+def _subtree_width(tiers, lo: int, hi: int) -> int:
+    """Tier-``lo`` rows under ONE tier-``hi`` aggregator:
+    ``prod(fanout of tiers lo+1..hi)`` (1 when ``lo == hi``)."""
+    out = 1
+    for t in range(lo + 1, hi + 1):
+        out *= tiers[t].fanout
+    return out
+
+
+def _hier_unit_sync(state: HFLState, bufs: HierBufs, *, hfl_cfg, cut: int,
+                    u: int, utop: int, wire):
+    """Within-unit consensus for mixed-discipline runs: boundaries
+    ``1..utop`` of the subtree under unit ``u`` (one tier-``cut-1``
+    aggregator, where ``cut`` is the lowest async boundary) sync bottom-up
+    and adopt downward, while every other unit's state is untouched. The
+    depth-3 ``cut=2`` instance is the historical per-edge tier-1 group
+    sync; deeper trees cascade the same drift/Ω/error-feedback protocol
+    over as many synchronous boundaries as fired this unit round."""
+    tiers = hfl_cfg.tiers
+    T = len(tiers)
     impl = hfl_cfg.omega_impl
+    assert 1 <= utop <= cut - 1 <= T - 2
+
     wn, p_spec = fl.pack_stacked(state.params)
     eps1, eps_spec = fl.pack_stacked(state.eps)
     Q = wn.shape[1]
-    ref = bufs.refs[0][e]
-    err = bufs.errs[0][e]
-    sent_rows = []
-    eps_new = eps1
-    for j in range(G):
-        c = e * G + j
-        s = wn[c] - ref + t1.beta_up * eps1[c]
-        vals, idx = sp.pack_phi(s, t1.phi_up, impl=impl)
-        if wire:
-            vals = _wire_round(vals, wire)
-        sent = sp.unpack_topk(vals, idx, Q)
-        sent_rows.append(sent)
-        eps_new = eps_new.at[c].set(s - sent)
-    delta = jnp.stack(sent_rows).mean(axis=0) + t1.beta_down * err
-    dvals, didx = sp.pack_phi(delta, t1.phi_down, impl=impl)
-    if wire:
-        dvals = _wire_round(dvals, wire)
-    d = sp.unpack_topk(dvals, didx, Q)
-    new_ref = ref + d
-    wn_new = wn
-    for j in range(G):
-        wn_new = wn_new.at[e * G + j].set(new_ref)
-    new_bufs = bufs._replace(
-        refs=(bufs.refs[0].at[e].set(new_ref),),
-        errs=(bufs.errs[0].at[e].set(delta - d),),
-    )
+
+    refs = list(bufs.refs)                 # index t-1, t in 1..T-2
+    epsu = [eps1] + list(bufs.eps)         # index t-1, t in 1..T-1
+    errs = list(bufs.errs)                 # index t-1, t in 1..T-2
+
+    child = wn
+    child_rows = [u * _subtree_width(tiers, 0, cut - 1) + j
+                  for j in range(_subtree_width(tiers, 0, cut - 1))]
+    for t in range(1, utop + 1):
+        tc = tiers[t]
+        G = tc.fanout
+        W = _subtree_width(tiers, t, cut - 1)  # tier-t parents in the unit
+        rows = [u * W + a for a in range(W)]
+        for a_i, a in enumerate(rows):
+            sent_rows = []
+            for j in range(G):
+                c = child_rows[a_i * G + j]
+                s = child[c] - refs[t - 1][a] + tc.beta_up * epsu[t - 1][c]
+                vals, idx = sp.pack_phi(s, tc.phi_up, impl=impl)
+                if wire:
+                    vals = _wire_round(vals, wire)
+                sent = sp.unpack_topk(vals, idx, Q)
+                sent_rows.append(sent)
+                epsu[t - 1] = epsu[t - 1].at[c].set(s - sent)
+            delta = (jnp.stack(sent_rows).mean(axis=0)
+                     + tc.beta_down * errs[t - 1][a])
+            dvals, didx = sp.pack_phi(delta, tc.phi_down, impl=impl)
+            if wire:
+                dvals = _wire_round(dvals, wire)
+            d = sp.unpack_topk(dvals, didx, Q)
+            refs[t - 1] = refs[t - 1].at[a].set(refs[t - 1][a] + d)
+            errs[t - 1] = errs[t - 1].at[a].set(delta - d)
+        child = refs[t - 1]
+        child_rows = rows
+
+    # downward adoption within the unit: every level below ``utop`` adopts
+    # its (new) ancestor reference, exactly like the global cascade
+    Wt = _subtree_width(tiers, utop, cut - 1)
+    adopt = refs[utop - 1][u * Wt:(u + 1) * Wt]
+    for t in range(utop, 0, -1):
+        adopt = jnp.repeat(adopt, tiers[t].fanout, axis=0)
+        lo = u * _subtree_width(tiers, t - 1, cut - 1)
+        if t - 1 >= 1:
+            refs[t - 2] = refs[t - 2].at[lo:lo + adopt.shape[0]].set(adopt)
+    wn = wn.at[lo:lo + adopt.shape[0]].set(adopt)
+
     state = state._replace(
-        params=fl.unpack_stacked(wn_new, p_spec),
-        eps=fl.unpack_stacked(eps_new, eps_spec),
+        params=fl.unpack_stacked(wn, p_spec),
+        eps=fl.unpack_stacked(epsu[0], eps_spec),
     )
+    new_bufs = HierBufs(refs=tuple(refs), eps=tuple(epsu[1:]),
+                        errs=tuple(errs))
     return state, new_bufs
 
 
-def _hier_root_push(state: HFLState, bufs: HierBufs, weight, *, hfl_cfg,
-                    e: int, wire):
-    """Staleness-weighted async push of edge ``e``'s reference to the root
-    (depth-3): Ω(phi_up) of the edge's drift with its tier-2 error buffer,
-    applied ``weight``-discounted to the root reference; the edge then
-    densely adopts the fresh root (the async engine's historical dense-DL
-    contract, now one level up)."""
-    t2 = hfl_cfg.tiers[2]
+def _hier_push(state: HFLState, bufs: HierBufs, weight, *, hfl_cfg, t: int,
+               a: int, wire):
+    """Staleness-weighted async push across boundary ``t``: tier-``t-1``
+    aggregator ``a`` (a cluster when ``t == 1``) Ω(phi_up)-pushes its drift
+    with its boundary-``t`` error buffer, the parent reference absorbs the
+    ``weight``-discounted delta, and ``a``'s whole subtree densely adopts
+    the fresh parent (the async engine's historical dense-DL contract,
+    applied at whatever level the boundary sits). The depth-3 root push is
+    the ``t = T-1`` instance."""
+    tiers = hfl_cfg.tiers
+    T = len(tiers)
+    tc = tiers[t]
     impl = hfl_cfg.omega_impl
-    wref, ref_spec = fl.pack(state.w_ref)
-    Q = wref.shape[0]
-    refs0, eps2 = bufs.refs[0], bufs.eps[0]
-    s = refs0[e] - wref + t2.beta_up * eps2[e]
-    vals, idx = sp.pack_phi(s, t2.phi_up, impl=impl)
+    p = a // tc.fanout
+
+    wn, p_spec = fl.pack_stacked(state.params)
+    eps1, eps_spec = fl.pack_stacked(state.eps)
+    Q = wn.shape[1]
+    refs = list(bufs.refs)
+    epsu = [eps1] + list(bufs.eps)
+
+    child_ref = wn[a] if t == 1 else refs[t - 2][a]
+    if t == T - 1:
+        wref, ref_spec = fl.pack(state.w_ref)
+        parent_ref = wref
+    else:
+        parent_ref = refs[t - 1][p]
+
+    s = child_ref - parent_ref + tc.beta_up * epsu[t - 1][a]
+    vals, idx = sp.pack_phi(s, tc.phi_up, impl=impl)
     if wire:
         vals = _wire_round(vals, wire)
     sent = sp.unpack_topk(vals, idx, Q)
-    new_wref = wref + weight * sent
-    wn, p_spec = fl.pack_stacked(state.params)
-    G = hfl_cfg.tiers[1].fanout
-    wn_new = wn
-    for j in range(G):
-        wn_new = wn_new.at[e * G + j].set(new_wref)
-    new_bufs = bufs._replace(
-        refs=(refs0.at[e].set(new_wref),),
-        eps=(eps2.at[e].set(s - sent),),
-    )
+    new_pref = parent_ref + weight * sent
+    epsu[t - 1] = epsu[t - 1].at[a].set(s - sent)
+    if t < T - 1:
+        refs[t - 1] = refs[t - 1].at[p].set(new_pref)
+
+    # dense downward adoption of the fresh parent through a's subtree
+    for tt in range(t - 1, 0, -1):
+        W = _subtree_width(tiers, tt, t - 1)
+        refs[tt - 1] = refs[tt - 1].at[a * W:(a + 1) * W].set(
+            jnp.broadcast_to(new_pref, (W, Q)))
+    W0 = _subtree_width(tiers, 0, t - 1)
+    wn = wn.at[a * W0:(a + 1) * W0].set(jnp.broadcast_to(new_pref, (W0, Q)))
+
     state = state._replace(
-        params=fl.unpack_stacked(wn_new, p_spec),
-        w_ref=fl.unpack(new_wref, ref_spec),
+        params=fl.unpack_stacked(wn, p_spec),
+        eps=fl.unpack_stacked(epsu[0], eps_spec),
+        w_ref=(fl.unpack(new_pref, ref_spec) if t == T - 1 else state.w_ref),
     )
+    new_bufs = bufs._replace(refs=tuple(refs), eps=tuple(epsu[1:]))
     return state, new_bufs
 
 
@@ -1027,7 +1084,7 @@ class HierSyncStep:
         self.cfg = hfl_cfg
         self._wire = wire_format_of(hfl_cfg)
         self._fns = {}
-        self._edge_fns = ({}, {})
+        self._unit_fns = ({}, {})
 
     def init_bufs(self, state: HFLState) -> HierBufs:
         return init_hier_bufs(state, self.cfg)
@@ -1048,36 +1105,46 @@ class HierSyncStep:
             self._fns[top] = fn
         return fn(state, bufs)
 
-    def edge_ops(self):
-        """Depth-3 async-mixed helpers -> ``(edge_sync, root_push)``:
-        ``edge_sync(state, bufs, e)`` runs edge ``e``'s tier-1 group
-        consensus; ``root_push(state, bufs, e, weight)`` pushes the edge's
-        reference to the root with a staleness weight. One jitted donating
-        program per edge (edge count = ``tiers[2].fanout``, small)."""
-        if len(self.cfg.tiers) != 3:
-            raise ValueError("edge_ops supports depth-3 hierarchies only")
-        sync_fns, push_fns = self._edge_fns
+    def unit_ops(self, cut: int):
+        """Mixed-discipline helpers for an async top suffix starting at
+        boundary ``cut`` -> ``(unit_sync, push)``.
 
-        def edge_sync(state, bufs, e: int):
-            fn = sync_fns.get(e)
+        ``unit_sync(state, bufs, u, utop)`` runs boundaries ``1..utop`` of
+        the subtree under unit ``u`` (one tier-``cut-1`` aggregator) as a
+        synchronous within-unit cascade; ``push(state, bufs, t, a, weight)``
+        async-pushes tier-``t-1`` aggregator ``a`` across boundary ``t``
+        with a staleness weight. One jitted donating program per distinct
+        ``(u, utop)`` / ``(t, a)`` — unit and aggregator counts are small.
+        The depth-3 async-root case is ``cut = 2``: per-edge tier-1 syncs
+        plus ``t = 2`` root pushes."""
+        if not 1 <= cut <= len(self.cfg.tiers) - 1:
+            raise ValueError(f"cut={cut} out of range for depth "
+                             f"{len(self.cfg.tiers)}")
+        sync_fns, push_fns = self._unit_fns
+
+        def unit_sync(state, bufs, u: int, utop: int = None):
+            utop = cut - 1 if utop is None else int(utop)
+            key = (int(u), utop)
+            fn = sync_fns.get(key)
             if fn is None:
                 fn = jax.jit(
-                    partial(_hier_edge_sync, hfl_cfg=self.cfg, e=int(e),
-                            wire=self._wire),
+                    partial(_hier_unit_sync, hfl_cfg=self.cfg, cut=cut,
+                            u=int(u), utop=utop, wire=self._wire),
                     donate_argnums=(0, 1))
-                sync_fns[e] = fn
+                sync_fns[key] = fn
             return fn(state, bufs)
 
-        def root_push(state, bufs, e: int, weight: float):
-            fn = push_fns.get(e)
+        def push(state, bufs, t: int, a: int, weight: float):
+            key = (int(t), int(a))
+            fn = push_fns.get(key)
             if fn is None:
                 fn = jax.jit(
-                    partial(_hier_root_push, hfl_cfg=self.cfg, e=int(e),
-                            wire=self._wire),
+                    partial(_hier_push, hfl_cfg=self.cfg, t=int(t),
+                            a=int(a), wire=self._wire),
                     donate_argnums=(0, 1))
-                push_fns[e] = fn
+                push_fns[key] = fn
             return fn(state, bufs, jnp.float32(weight))
-        return edge_sync, root_push
+        return unit_sync, push
 
 
 # ---- builder --------------------------------------------------------------

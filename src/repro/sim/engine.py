@@ -413,14 +413,6 @@ class SimEngine:
             if hfl_cfg is not None else "analytic"
         if self._acc not in ("analytic", "measured"):
             raise ValueError(f"unknown payload_accounting {self._acc!r}")
-        if self._acc == "measured" and hfl_cfg is not None \
-                and len(hfl_cfg.tiers) > 2:
-            # the probe mirrors the two-level flat sync; measuring a deeper
-            # cascade's payloads through it would report bits that were
-            # never transmitted
-            raise ValueError(
-                "payload_accounting='measured' supports depth-2 "
-                "hierarchies only")
         # client selection (sim.selection): caps each cluster's
         # participants at ceil(prate * size) under a policy. None = the
         # identity (prate >= 1, uniform) — no RNG stream is even created,
@@ -493,25 +485,78 @@ class SimEngine:
             self._rounds_part = self._rounds_seen = None
         self.obs.reset_run()
         self._setup_measured(state)
-        if getattr(sync_step, "hier", False):
-            if self.hfl is None:
-                # null-wireless adapter (core.schedule.run_hfl): adopt the
-                # tiered sync's own config for the hierarchy bookkeeping
-                self.hfl = sync_step.cfg
-            if any(tc.discipline == "async" for tc in self.hfl.tiers[1:]):
-                # mixed-discipline hierarchy: the async tier owns the clock
-                return self._run_hier_async(state, train_step, sync_step,
-                                            batches, num_steps, on_step)
-        disc = self.sim.discipline
-        if disc in ("lockstep", "deadline"):
+        hier = bool(getattr(sync_step, "hier", False))
+        if hier and self.hfl is None:
+            # null-wireless adapter (core.schedule.run_hfl): adopt the
+            # tiered sync's own config for the hierarchy bookkeeping
+            self.hfl = sync_step.cfg
+        cut, deadline = self._tier_disciplines(hier)
+        if cut is None:
             return self._run_lockstep(
                 state, train_step, sync_step, batches, num_steps, on_step,
-                deadline=disc == "deadline",
+                deadline=deadline,
             )
-        if disc == "async":
+        if not hier:
+            # depth-2 flat async: the per-cluster staleness-weighted
+            # consensus (make_async_sync_step) — the degenerate single-
+            # boundary instance of the unit scheduler, kept as its own
+            # loop so the historical event/RNG trajectory replays
+            # bit-identically
             return self._run_async(state, train_step, batches, num_steps,
                                    on_step, masked_train_step)
-        raise ValueError(f"unknown discipline {disc!r}")
+        return self._run_units(state, train_step, sync_step, batches,
+                               num_steps, on_step, cut=cut)
+
+    def _tier_disciplines(self, hier: bool):
+        """Resolve the run's sync disciplines -> ``(cut, deadline)``:
+        ``cut`` is the lowest ASYNC tier boundary (every boundary at or
+        above it runs clock-free; ``None`` = fully synchronous run) and
+        ``deadline`` flags the boundary-1 per-MU straggler drop.
+
+        Two spellings coexist: the legacy fleet-wide ``SimConfig.
+        discipline`` knob, and per-tier ``TierConfig.discipline`` entries
+        (PR 9). When every tier keeps the default lockstep, the legacy
+        knob maps onto the tree — ``deadline`` onto boundary 1, ``async``
+        onto the TOP boundary (the same boundary at depth 2) — otherwise
+        the explicit per-tier entries win. Async boundaries must form a
+        contiguous top suffix of the tree (a synchronous barrier cannot
+        run above children on their own clocks), and ``deadline`` is only
+        meaningful at boundary 1, below any async cut."""
+        sim_disc = self.sim.discipline
+        if sim_disc not in ("lockstep", "deadline", "async"):
+            raise ValueError(f"unknown discipline {sim_disc!r}")
+        if self.hfl is None or not hier:
+            # flat depth-2 runs keep the legacy fleet-wide knob verbatim
+            if sim_disc == "async":
+                return 1, False
+            return None, sim_disc == "deadline"
+        d = [tc.discipline for tc in self.hfl.tiers[1:]]
+        if all(x == "lockstep" for x in d) and sim_disc != "lockstep":
+            if sim_disc == "deadline":
+                d[0] = "deadline"
+            else:
+                d[-1] = "async"
+        cut = None
+        for i, x in enumerate(d):
+            if x == "async":
+                cut = i + 1
+                break
+        if cut is not None and any(x != "async" for x in d[cut - 1:]):
+            raise ValueError(
+                f"async tier boundaries must form a contiguous top suffix "
+                f"of the tree (got disciplines {tuple(d)}): a synchronous "
+                f"barrier cannot run above children on their own clocks")
+        if any(x == "deadline" for x in d[1:]):
+            raise ValueError(
+                "the deadline discipline applies at tier boundary 1 only "
+                "(the per-MU round deadline); higher boundaries are "
+                "lockstep or async")
+        deadline = d[0] == "deadline"
+        if deadline and cut is not None:
+            raise ValueError(
+                "a deadline boundary below an async cut is not supported "
+                "yet (the unit scheduler prices rounds without drops)")
+        return cut, deadline
 
     # --- wireless plumbing -----------------------------------------------
 
@@ -542,19 +587,28 @@ class SimEngine:
                 f"sync's wire format is {wire}: measured bits price a "
                 f"fidelity the simulation does not exchange", stacklevel=2)
         Q = fl.spec_of(state.w_ref).total
+        depth = len(self.hfl.tiers)
         self.ledger = acct.PayloadLedger(
             codec=self._codec.name, size=Q,
+            links=acct.link_names(depth),
             registry=self.obs.registry if self.obs.enabled else None)
-        self._probe = acct.make_sync_probe(self.hfl, self._codec)
+        # depth 2 probes the flat whole-model sync; deeper trees probe the
+        # tiered cascade's per-boundary Omega payloads (same codec streams)
+        self._probe = (acct.make_sync_probe(self.hfl, self._codec)
+                       if depth == 2
+                       else acct.make_hier_sync_probe(self.hfl, self._codec))
+        # static per-boundary access bits on synthetic exact-k payloads:
+        # boundary t's uplink prices tiers[t].phi_up, its downlink
+        # tiers[t].phi_down (depth-2 keys: mu_ul/sbs_dl/sbs_ul/mbs_dl)
         self._ab = {
-            "mu_ul": acct.access_bits(self._codec, Q, self.hfl.tiers[0].phi_up),
-            "sbs_dl": acct.access_bits(self._codec, Q, self.hfl.tiers[0].phi_down),
-            "sbs_ul": acct.access_bits(self._codec, Q, self.hfl.tiers[1].phi_up),
-            "mbs_dl": acct.access_bits(self._codec, Q, self.hfl.tiers[1].phi_down),
             # the async dense adoption ships the raw reference: price it as
             # dense-f32 regardless of the (sparse) codec in use
             "dense": acct.access_bits("dense-f32", Q, 0.0),
         }
+        for ti, tc in enumerate(self.hfl.tiers):
+            ul_l, dl_l = acct.boundary_links(ti)
+            self._ab[ul_l] = acct.access_bits(self._codec, Q, tc.phi_up)
+            self._ab[dl_l] = acct.access_bits(self._codec, Q, tc.phi_down)
         self._aux = None  # re-price the radio with measured payloads
 
     def _payload_overrides(self):
@@ -979,18 +1033,22 @@ class SimEngine:
     def _count_sync_hier(self, top: int):
         """Analytic fronthaul charge of one tiered-consensus boundary up to
         tier ``top`` -> ``(ul_bits, dl_bits)``: each firing tier t prices
-        ``A_{t-1}`` child uplinks at its ``phi_up`` and ``A_t`` parent
-        downlinks at its ``phi_down`` (the depth-2 ``top=1`` instance is
-        exactly ``_count_sync(N)``)."""
+        ``A_{t-1}`` child uplinks and ``A_t`` parent downlinks at that tier
+        boundary's link payloads (``latency.tier_payload_bits``; the
+        depth-2 ``top=1`` instance is exactly ``_count_sync(N)``)."""
         self._sync_launches += 1
         if not self.wireless:
             return 0.0, 0.0
-        lp, hfl = self.lp, self.hfl
+        from repro.comm.accounting import boundary_links
+        from repro.wireless.latency import tier_payload_bits
+
+        hfl = self.hfl
+        pb = tier_payload_bits(self.lp, hfl.tiers)
         ul = dl = 0.0
         for ti in range(1, top + 1):
-            tc = hfl.tiers[ti]
-            ul += hfl.agg_count(ti - 1) * lp.payload(tc.phi_up)
-            dl += hfl.agg_count(ti) * lp.payload(tc.phi_down)
+            ul_l, dl_l = boundary_links(ti)
+            ul += hfl.agg_count(ti - 1) * pb[ul_l]
+            dl += hfl.agg_count(ti) * pb[dl_l]
         self._bits_fronthaul += ul + dl
         return ul, dl
 
@@ -1001,36 +1059,110 @@ class SimEngine:
         if not self.wireless or top < 2:
             return 0.0
         aux = self._latency_aux()
-        lp, hfl = self.lp, self.hfl
+        from repro.comm.accounting import boundary_links
+        from repro.wireless.latency import tier_payload_bits
+
+        pb = tier_payload_bits(self.lp, self.hfl.tiers)
         extra = 0.0
         for ti in range(2, top + 1):
-            tc = hfl.tiers[ti]
-            extra += (lp.payload(tc.phi_up) + lp.payload(tc.phi_down)) \
-                / aux["fh_rate"]
+            ul_l, dl_l = boundary_links(ti)
+            extra += (pb[ul_l] + pb[dl_l]) / aux["fh_rate"]
         return extra
 
-    def _count_sync_edge(self, fanout: int):
-        """Analytic fronthaul charge of ONE edge's tier-1 consensus."""
+    def _count_sync_unit(self, utop: int, cut: int):
+        """Analytic fronthaul charge of ONE unit's consensus cascade up to
+        tier ``utop`` — the within-unit slice of ``_count_sync_hier``:
+        boundary t prices its subtree's child uplinks at ``phi_up`` and
+        parent downlinks at ``phi_down``. The depth-3 ``utop=1, cut=2``
+        instance is the historical single-edge tier-1 consensus charge."""
         self._sync_launches += 1
         if not self.wireless:
             return 0.0, 0.0
-        t1 = self.hfl.tiers[1]
-        ul = fanout * self.lp.payload(t1.phi_up)
-        dl = self.lp.payload(t1.phi_down)
+        lp, tiers = self.lp, self.hfl.tiers
+
+        def width(j: int) -> int:  # tier-j aggregators per unit
+            out = 1
+            for k in range(j + 1, cut):
+                out *= tiers[k].fanout
+            return out
+
+        ul = dl = 0.0
+        for ti in range(1, utop + 1):
+            ul += width(ti - 1) * lp.payload(tiers[ti].phi_up)
+            dl += width(ti) * lp.payload(tiers[ti].phi_down)
         self._bits_fronthaul += ul + dl
         return ul, dl
 
-    def _count_sync_root(self):
-        """Analytic fronthaul charge of one async root push: Ω uplink at
-        the root tier's ``phi_up``, dense reference adoption downlink."""
+    def _count_sync_push(self, t: int):
+        """Analytic fronthaul charge of one async push across tier
+        boundary ``t``: Ω uplink at the tier's ``phi_up``, dense reference
+        adoption downlink (the child pulls the parent's whole reference)."""
         self._sync_launches += 1
         if not self.wireless:
             return 0.0, 0.0
-        t2 = self.hfl.tiers[-1]
-        ul = self.lp.payload(t2.phi_up)
+        tc = self.hfl.tiers[t]
+        ul = self.lp.payload(tc.phi_up)
         dl = self.lp.payload(0.0)  # dense adoption ships the raw reference
         self._bits_fronthaul += ul + dl
         return ul, dl
+
+    def _measure_sync_hier(self, state, hbufs, top: int):
+        """Measure the REAL per-boundary payloads of one tiered consensus
+        (depth > 2 measured accounting) -> ``(ul_bits, dl_bits, sync_s,
+        bcast_bits, legs, row_bits)``. The hier probe re-runs the
+        cascade's Ω selection on the same ``(state, bufs)``; each
+        boundary's payloads land on ITS ledger links (boundary 1 keeps the
+        historic ``sbs_ul``/``mbs_dl`` names, boundary t >= 2 uses
+        ``t{t}_ul``/``t{t}_dl``), the sync time is re-priced from the
+        actual bits — the slowest child of each boundary fans in over the
+        fronthaul, every boundary a serial hop pair — and the
+        post-consensus SBS->MU broadcast ships each cluster's ACTUAL
+        adopted tier-1 delta at its realized DL rate. ``legs`` carries
+        (link, bits, dur) span pairs holding exactly the ledger-recorded
+        floats, so the span/ledger conservation bugcheck is bit-for-bit."""
+        from repro.comm.accounting import boundary_links
+
+        uls, dls = self._probe(state, hbufs, top)
+        self._sync_launches += 1
+        aux = self._latency_aux()
+        legs = []
+        row_bits = {}
+        ul_tot = dl_tot = sync_s = 0.0
+        for ti in range(1, top + 1):
+            ub = np.asarray(uls[ti - 1], np.float64)
+            db = np.asarray(dls[ti - 1], np.float64)
+            ul_l, dl_l = boundary_links(ti)
+            u_rec = self.ledger.record(ul_l, float(ub.sum()),
+                                       events=int(ub.size))
+            d_rec = self.ledger.record(dl_l, float(db.sum()),
+                                       events=int(db.size))
+            ul_tot += u_rec
+            dl_tot += d_rec
+            u_dur = float(ub.max()) / aux["fh_rate"]
+            d_dur = float(db.max()) / aux["fh_rate"]
+            sync_s += u_dur + d_dur
+            legs.append((ul_l, u_rec, u_dur, dl_l, d_rec, d_dur))
+            row_bits[f"bits_{ul_l}"] = u_rec
+            row_bits[f"bits_{dl_l}"] = d_rec
+        self._bits_fronthaul += ul_tot + dl_tot
+        # post-consensus broadcast: cluster n adopts its tier-1
+        # aggregator's delta (its dls[0] row) and re-broadcasts it to its
+        # MUs; clusters mobility has emptied report dl_rate=inf (no
+        # broadcast time, no audience) and are charged neither
+        db0 = np.asarray(dls[0], np.float64)
+        per_cluster = np.repeat(db0, self.hfl.tiers[1].fanout)
+        finite = np.isfinite(aux["dl_rates"])
+        t_bcast = np.where(finite, per_cluster / aux["dl_rates"], 0.0)
+        n_bcast = int(finite.sum())
+        bcast_b = None
+        if n_bcast:
+            bcast_b = self.ledger.record(
+                "sbs_dl", float(per_cluster[finite].sum()), events=n_bcast)
+            self._bits_access += bcast_b
+            sync_s += float(t_bcast[finite].max())
+        row_bits["bits_sync_bcast"] = (
+            float(per_cluster[finite].sum()) if n_bcast else 0.0)
+        return ul_tot, dl_tot, sync_s, bcast_b, legs, row_bits
 
     def _count_sync_measured(self, ul_bits, dl_bits: float):
         """Record the REAL fronthaul payload bits of one sync event
@@ -1121,15 +1253,32 @@ class SimEngine:
 
     def _trace_sync(self, step: int, t0: float, sync_s: float,
                     ul_bits: float, dl_bits: float, bcast_bits,
-                    fh_parts, extra: dict) -> None:
+                    fh_parts, extra: dict, legs=None) -> None:
         """Virtual-clock spans of one global consensus: the engine-track
         sync span plus fronthaul UL/DL link spans and (measured mode) the
         repriced SBS->MU broadcast span. ``fh_parts`` carries the measured
-        per-leg durations; the analytic path falls back to the aux θ's."""
+        per-leg durations; the analytic path falls back to the aux θ's.
+        ``legs`` (depth > 2 measured) replaces the fixed fronthaul pair
+        with one tier-labeled span pair per cascade boundary, each
+        carrying exactly the ledger-recorded bits (the span/ledger
+        conservation bugcheck is bit-for-bit), laid out serially up the
+        tree."""
         tr = self.obs.tracer
         tr.span("sync", track="engine", t0=t0, dur=sync_s,
                 args={"step": step, **extra})
         if not self.wireless:
+            return
+        if legs is not None:
+            tt = t0
+            for ul_l, ub, ud, dl_l, db, dd in legs:
+                tr.link_span(ul_l, t0=tt, dur=ud, bits=ub, name="sync_ul")
+                tt += ud
+                tr.link_span(dl_l, t0=tt, dur=dd, bits=db, name="sync_dl")
+                tt += dd
+            if bcast_bits is not None:
+                tr.link_span("sbs_dl", t0=tt,
+                             dur=max(sync_s - (tt - t0), 0.0),
+                             bits=bcast_bits, name="sync_bcast")
             return
         if fh_parts is not None:
             fh_ul, fh_dl, t_bc = fh_parts
@@ -1212,13 +1361,23 @@ class SimEngine:
                 sync_s = ctx["sync_s"]
                 row_extra = {}
                 sync_ul = sync_dl = 0.0
-                bcast_b = fh_parts = None
+                bcast_b = fh_parts = legs = None
                 top = None
                 if hier:
                     top = sync_step.fire_top((step + 1) // H)
-                    sync_ul, sync_dl = self._count_sync_hier(top)
-                    sync_s += self._hier_sync_extra_s(top)
                     row_extra = {"tier": int(top)}
+                    if self.ledger is not None:
+                        # measure the cascade's REAL per-boundary payloads
+                        # (before the donating sync step consumes the
+                        # state) and re-price the whole boundary from the
+                        # actual bit counts
+                        (sync_ul, sync_dl, sync_s, bcast_b, legs,
+                         row_bits) = self._measure_sync_hier(
+                             state, hbufs, top)
+                        row_extra.update(row_bits)
+                    else:
+                        sync_ul, sync_dl = self._count_sync_hier(top)
+                        sync_s += self._hier_sync_extra_s(top)
                 elif self.ledger is not None:
                     # measure the REAL fronthaul payloads this sync sends
                     # (before the donating sync step consumes the state)
@@ -1271,7 +1430,8 @@ class SimEngine:
                 t += sync_s
                 if self.obs.enabled:
                     self._trace_sync(step, t_sync0, sync_s, sync_ul,
-                                     sync_dl, bcast_b, fh_parts, row_extra)
+                                     sync_dl, bcast_b, fh_parts, row_extra,
+                                     legs=legs)
                 if stats_on:
                     self.obs.health.ingest_sync_stats(sstats, t=t)
                     self.obs.health.ingest_payload(sync_ul + sync_dl, t=t)
@@ -1588,62 +1748,85 @@ class SimEngine:
         trace.meta.update(self._totals())
         return state, trace
 
-    # --- mixed-discipline hierarchy (depth 3, async root) ------------------
+    # --- mixed-discipline hierarchy: async boundaries above a cut ----------
 
-    def _run_hier_async(self, state, train_step, sync_step, batches,
-                        num_steps, on_step):
-        """Depth-3 hierarchy with an async root tier: each tier-1
-        aggregator ("edge") runs lockstep tier-1 rounds on its own clock —
-        H intra-cluster iterations of ITS clusters, then the edge's group
-        consensus — and every ``tiers[2].period`` edge-rounds pushes its
-        reference to the root with a staleness-discounted weight
-        (``async_weight`` over the E edges). The tiers below the async
-        boundary keep their lockstep semantics; only the root exchange is
-        clock-free, so straggler edges never stall the fleet.
+    def _run_units(self, state, train_step, sync_step, batches, num_steps,
+                   on_step, *, cut: int):
+        """Tier-recursive async scheduler: every tier boundary at or above
+        ``cut`` runs clock-free, everything below stays lockstep. The
+        subtree under one tier-``cut-1`` aggregator is a scheduling
+        **unit** (the depth-3 async-root "edge"): it runs tier-1 rounds on
+        its own clock — H intra-cluster iterations of ITS clusters, then
+        its within-unit consensus cascade (boundaries ``1..cut-1`` at
+        their lockstep cadences) — and every ``prod(tiers[2..cut].
+        period)`` unit-rounds pushes its reference across the cut with a
+        staleness-discounted weight (``async_weight`` over the
+        ``tiers[cut].fanout`` siblings). A push landing on a parent may
+        cascade further up: boundary ``t > cut`` fires after every
+        ``tiers[t].period`` pushes the parent RECEIVES, so stragglers
+        below never stall anything above. The depth-3 async-root path
+        (``cut == 2``) replays the historical behaviour bit-identically.
         """
         hfl = self.hfl
         tiers = hfl.tiers
-        if len(tiers) != 3 or tiers[2].discipline != "async":
-            raise ValueError(
-                "mixed-discipline hierarchies support depth 3 with an "
-                "async ROOT tier only (tiers[2].discipline='async')")
+        T = len(tiers)
         if self.residency is not None or self._oversub:
             raise ValueError(
-                "the async-root hierarchy does not support residency "
+                "async tier boundaries do not support residency "
                 "tracking or oversubscribed fleets yet")
+        if self.ledger is not None:
+            raise ValueError(
+                "payload_accounting='measured' is not supported above an "
+                "async tier boundary at depth > 2 yet: the hier probe "
+                "mirrors the synchronous cascade, not per-unit push "
+                "payloads")
         H = self.period
         N = hfl.num_clusters
-        E = hfl.agg_count(1)   # tier-1 aggregators ("edges")
-        G = tiers[1].fanout    # clusters per edge
-        H2 = tiers[2].period   # edge-rounds between root pushes
+        U = hfl.agg_count(cut - 1)  # async units (tier cut-1 aggregators)
+        G = N // U                  # clusters per unit
+        # unit-rounds between cut pushes: the cut boundary keeps its
+        # lockstep cadence relative to the tiers below it (hier_fire_top's
+        # period product), it just fires on the unit's OWN clock
+        Hc = 1
+        for ti in range(2, cut + 1):
+            Hc *= tiers[ti].period
         mpc = hfl.mus_per_cluster
         rounds = num_steps // H
         trace = Trace(meta=self._meta())
-        trace.meta["hier_depth"] = len(tiers)
+        trace.meta["hier_depth"] = T
         if rounds == 0:
             trace.meta.update(self._totals())
             return state, trace
+        from repro.core.hfl import hier_fire_top
+
         it = iter(batches)
         q = EventQueue()
         bufs = sync_step.init_bufs(state)
-        edge_sync, root_push = sync_step.edge_ops()
+        unit_sync, push = sync_step.unit_ops(cut)
         comp = (self.fleet.compute_times(self.sim.base_compute_s)
                 if self.fleet is not None else None)
 
-        def edge_rt(e: int) -> float:
+        def unit_rt(u: int) -> float:
             crt = self._cluster_round_times(comp)
-            return float(crt[e * G:(e + 1) * G].max())
+            return float(crt[u * G:(u + 1) * G].max())
 
-        for e in range(E):
-            q.push(edge_rt(e), Event("edge_done", cluster=e, round=0))
-        root_updates = 0
-        last_pull = [0] * E
+        for u in range(U):
+            q.push(unit_rt(u), Event("unit_done", cluster=u, round=0))
+        # per-boundary async bookkeeping (boundaries cut..T-1): pushes
+        # LANDED per parent, each child's parent-counter at its last pull,
+        # and (above the cut) pushes a parent has received since it last
+        # fired upward
+        updates = {tb: [0] * hfl.agg_count(tb) for tb in range(cut, T)}
+        last_pull = {tb: [0] * hfl.agg_count(tb - 1)
+                     for tb in range(cut, T)}
+        pending = {tb: [0] * hfl.agg_count(tb - 1)
+                   for tb in range(cut + 1, T)}
         steps_done = 0
         fleet_time = 0.0
-        round_t0 = np.zeros(E)
+        round_t0 = np.zeros(U)
         while len(q):
             t, ev = q.pop()
-            e = ev.cluster
+            u = ev.cluster
             if self.fleet is not None and self.fleet.mobile:
                 self._advance_fleet(t - fleet_time, now=t)
                 fleet_time = t
@@ -1656,26 +1839,33 @@ class SimEngine:
                 if avail is None:
                     avail = np.ones(self.fleet.K, bool)
                 avail = avail & (self.fleet.cid != fault)
+            slots = slice(u * G * mpc, (u + 1) * G * mpc)
             if self.selector is not None:
                 if avail is None:
                     avail = np.ones(self.fleet.K, bool)
-                avail = self.selector.select(avail, self.fleet, t)
-            edge_clusters = np.zeros(N, bool)
-            edge_clusters[e * G:(e + 1) * G] = True
+                # per-tier selection hook: the policy runs over THIS
+                # unit's clusters at ITS round time (other units keep
+                # their own clocks, draws and masks)
+                sel = self.selector.select(
+                    avail, self.fleet, t,
+                    clusters=range(u * G, (u + 1) * G))
+                avail = avail.copy()
+                avail[slots] = sel[slots]
+            unit_clusters = np.zeros(N, bool)
+            unit_clusters[u * G:(u + 1) * G] = True
             mask = None
             dropped = 0
-            slots = slice(e * G * mpc, (e + 1) * G * mpc)
             if avail is not None:
                 mask = None if avail.all() else avail
                 dropped = int((~avail[slots]).sum())
-            # clusters in the edge with at least one participant update;
-            # the rest (and every other edge) keep their state untouched
-            keep = edge_clusters
+            # clusters in the unit with at least one participant update;
+            # the rest (and every other unit) keep their state untouched
+            keep = unit_clusters
             if mask is not None:
-                keep = edge_clusters & mask.reshape(N, mpc).any(axis=1)
+                keep = unit_clusters & mask.reshape(N, mpc).any(axis=1)
             participants = (int(avail[slots].sum()) if avail is not None
                             else G * mpc)
-            # step-indexed LR schedules follow THIS edge's round progress,
+            # step-indexed LR schedules follow THIS unit's round progress,
             # same contract as the flat async loop
             state = state._replace(
                 step=jnp.asarray(ev.round * H, jnp.int32))
@@ -1687,59 +1877,81 @@ class SimEngine:
                 state = _merge_clusters(state, new_state, keep)
                 steps_done += 1
                 self._count_train(participants, int(keep.sum()))
-            # tier-1 consensus of this edge only
-            with self.obs.host_span("sync_step"):
-                state, bufs = edge_sync(state, bufs, e)
-            s_ul, s_dl = self._count_sync_edge(G)
-            loss_e = float(jnp.mean(loss) if jnp.ndim(loss) == 0
-                           else jnp.mean(loss[e * G:(e + 1) * G]))
+            # within-unit consensus: boundaries 1..utop at their lockstep
+            # cadences, capped below the cut (higher boundaries are
+            # clock-free pushes, not barriers)
+            utop = min(hier_fire_top(tiers, ev.round + 1), cut - 1)
+            if utop >= 1:
+                with self.obs.host_span("sync_step"):
+                    state, bufs = unit_sync(state, bufs, u, utop)
+                s_ul, s_dl = self._count_sync_unit(utop, cut)
+            loss_u = float(jnp.mean(loss) if jnp.ndim(loss) == 0
+                           else jnp.mean(loss[u * G:(u + 1) * G]))
             if self.obs.enabled:
                 self.obs.tracer.span(
-                    "round", track=f"edge{e}", t0=round_t0[e],
-                    dur=t - round_t0[e],
+                    "round", track=f"edge{u}", t0=round_t0[u],
+                    dur=t - round_t0[u],
                     args={"round": int(ev.round), "dropped": dropped})
-            for c in range(e * G, (e + 1) * G):
+            for c in range(u * G, (u + 1) * G):
                 self._mark_round(c, bool(keep[c]), t)
-            if self._record:
-                trace.add(kind="sync", t=t, step=steps_done - 1, tier=1,
-                          edge=int(e), round=int(ev.round),
-                          dropped=dropped, loss=loss_e,
+            if self._record and utop >= 1:
+                trace.add(kind="sync", t=t, step=steps_done - 1,
+                          tier=int(utop), edge=int(u), round=int(ev.round),
+                          dropped=dropped, loss=loss_u,
                           bits_ul=s_ul, bits_dl=s_dl)
-            self.obs.health.ingest_loss(loss_e, t=t)
-            if (ev.round + 1) % H2 == 0:
-                # async root push: staleness counts the root updates other
-                # edges landed since this edge last pulled the reference
-                staleness = root_updates - last_pull[e]
-                w = async_weight(staleness, E, self.sim.staleness_exp)
-                with self.obs.host_span("sync_step"):
-                    state, bufs = root_push(state, bufs, e, w)
-                root_updates += 1
-                last_pull[e] = root_updates
-                r_ul, r_dl = self._count_sync_root()
-                t_push = 0.0
-                if self.wireless:
-                    aux = self._latency_aux()
-                    t_push = (r_ul + r_dl) / aux["fh_rate"]
-                t += t_push
-                if self.obs.enabled:
-                    self.obs.registry.histogram("sim.staleness").observe(
-                        float(staleness), cluster=f"e{e}")
-                    self.obs.tracer.span(
-                        "sync", track=f"edge{e}", t0=t - t_push, dur=t_push,
-                        args={"round": int(ev.round), "tier": 2,
-                              "staleness": int(staleness),
-                              "weight": float(w)})
-                if self._record:
-                    trace.add(kind="sync", t=t, step=steps_done - 1, tier=2,
-                              edge=int(e), round=int(ev.round),
-                              staleness=int(staleness), weight=float(w),
-                              bits_ul=r_ul, bits_dl=r_dl)
+            self.obs.health.ingest_loss(loss_u, t=t)
+            if (ev.round + 1) % Hc == 0:
+                # async push across the cut, cascading up through any
+                # counted boundaries above it: staleness counts the
+                # updates siblings landed on the parent since this child
+                # last pulled its reference
+                a, tb = u, cut
+                while tb < T:
+                    p = a // tiers[tb].fanout
+                    staleness = updates[tb][p] - last_pull[tb][a]
+                    w = async_weight(staleness, tiers[tb].fanout,
+                                     self.sim.staleness_exp)
+                    with self.obs.host_span("sync_step"):
+                        state, bufs = push(state, bufs, tb, a, w)
+                    updates[tb][p] += 1
+                    last_pull[tb][a] = updates[tb][p]
+                    r_ul, r_dl = self._count_sync_push(tb)
+                    t_push = 0.0
+                    if self.wireless:
+                        aux = self._latency_aux()
+                        t_push = (r_ul + r_dl) / aux["fh_rate"]
+                    t += t_push
+                    if self.obs.enabled:
+                        label = f"e{a}" if tb == cut else f"t{tb}a{a}"
+                        self.obs.registry.histogram(
+                            "sim.staleness").observe(
+                                float(staleness), cluster=label)
+                        self.obs.tracer.span(
+                            "sync", track=f"edge{u}", t0=t - t_push,
+                            dur=t_push,
+                            args={"round": int(ev.round), "tier": int(tb),
+                                  "staleness": int(staleness),
+                                  "weight": float(w)})
+                    if self._record:
+                        trace.add(kind="sync", t=t, step=steps_done - 1,
+                                  tier=int(tb), edge=int(a),
+                                  round=int(ev.round),
+                                  staleness=int(staleness),
+                                  weight=float(w),
+                                  bits_ul=r_ul, bits_dl=r_dl)
+                    if tb + 1 >= T:
+                        break
+                    pend = pending[tb + 1]
+                    pend[p] += 1
+                    if pend[p] % tiers[tb + 1].period != 0:
+                        break
+                    a, tb = p, tb + 1
             if on_step is not None:
                 on_step(steps_done - 1, state, loss)
             if ev.round + 1 < rounds:
-                q.push(t + edge_rt(e),
-                       Event("edge_done", cluster=e, round=ev.round + 1))
-            round_t0[e] = t
+                q.push(t + unit_rt(u),
+                       Event("unit_done", cluster=u, round=ev.round + 1))
+            round_t0[u] = t
             self.obs.tick()
         self._finish_run()
         trace.meta.update(self._totals())

@@ -48,6 +48,11 @@ Each scenario bundles a ``SimConfig`` (fleet + discipline knobs) with the
                       the tiered cascade fires tier 1 every period and the
                       root every ``tiers[2].period`` rounds, with per-tier
                       Ω/error-feedback and per-tier fronthaul pricing.
+  * ``hier-deadline`` — the depth-3 tree with the DEADLINE discipline on
+                      the middle tier (``tiers[1]``): straggler MUs are
+                      dropped at the per-round deadline and their
+                      sub-carriers reclaimed by the survivors, while the
+                      root keeps its lockstep cadence.
   * ``prate-biased`` — paper-fig3 layout with ``prate=0.5`` rate-biased
                       client selection: each round only the fastest half
                       of every cell trains, cutting measured access-UL
@@ -210,6 +215,26 @@ SCENARIOS = {
         )),
         note="depth-3 tiered consensus: 2 edges x 2 SBS x 4 MUs, root "
              "fires every 2 tier-1 rounds, per-tier fronthaul pricing",
+    ),
+    "hier-deadline": Scenario(
+        name="hier-deadline", kind="train",
+        sim=SimConfig(scenario="hier-deadline", compute_sigma=1.0,
+                      deadline_factor=1.25),
+        # hier-3tier's tree with the DEADLINE discipline on the middle
+        # tier (boundary 1): straggler MUs that would blow the round
+        # deadline are dropped and their sub-carriers reclaimed by the
+        # survivors (Alg. 2 re-allocation), while the tiers above keep
+        # their lockstep cadence. Exercises per-tier disciplines without
+        # the legacy fleet-wide SimConfig.discipline knob.
+        hfl=dict(sync_mode="sparse", tiers=(
+            dict(fanout=4, period=1, phi_up=0.99, phi_down=0.9),
+            dict(fanout=2, period=2, phi_up=0.9, phi_down=0.9,
+                 beta_up=0.5, beta_down=0.2, discipline="deadline"),
+            dict(fanout=2, period=2, phi_up=0.9, phi_down=0.9,
+                 beta_up=0.5, beta_down=0.2),
+        )),
+        note="depth-3 tree, deadline discipline on the middle tier: "
+             "straggler drop + subcarrier reclaim under a lockstep root",
     ),
     "prate-biased": Scenario(
         name="prate-biased", kind="train",

@@ -58,7 +58,14 @@ def _kmeans_medoids(pos: np.ndarray, k: int, rng, iters: int = 8):
 
 class ClientSelector:
     """Per-round participation filter: ``select(avail, fleet, t)`` returns
-    the selected subset of ``avail`` (bool [K])."""
+    the selected subset of ``avail`` (bool [K]).
+
+    ``select(..., clusters=...)`` restricts the policy to a subset of
+    clusters — the per-tier hook: a mixed-discipline run selects per unit
+    (the clusters under one asynchronously-scheduled aggregator) at that
+    unit's own round times instead of fleet-wide at a global barrier.
+    ``clusters=None`` (the default) keeps the historical fleet-wide sweep
+    and its RNG draw order bit-identical."""
 
     def __init__(self, hfl_cfg, sim_cfg):
         self.prate = float(getattr(sim_cfg, "prate", 1.0))
@@ -77,7 +84,7 @@ class ClientSelector:
     def cap(self, cluster_size: int) -> int:
         return max(1, math.ceil(self.prate * cluster_size))
 
-    def select(self, avail, fleet, t: float) -> np.ndarray:
+    def select(self, avail, fleet, t: float, clusters=None) -> np.ndarray:
         if avail is None:
             avail = np.ones(fleet.K, bool)
         out = np.zeros(fleet.K, bool)
@@ -85,7 +92,9 @@ class ClientSelector:
         # the fleet's cached CSR membership view: one stable argsort per
         # (re)association epoch instead of N nonzero scans per round
         order, starts = fleet.cluster_members_csr()
-        for n in range(self.hfl.num_clusters):
+        if clusters is None:
+            clusters = range(self.hfl.num_clusters)
+        for n in clusters:
             members = order[starts[n]:starts[n + 1]]
             if members.size == 0:
                 continue

@@ -67,6 +67,28 @@ class LatencyParams:
         return self.model_params * frac * (self.bits_per_param + self.index_bits * (phi > 0))
 
 
+def tier_payload_bits(lp: LatencyParams, tiers, overrides=None) -> dict:
+    """Per-boundary payload bits of an arbitrary-depth tier tree.
+
+    -> ``{link_name: bits}`` over :func:`repro.comm.accounting.link_names`
+    of ``len(tiers)``: boundary 0 is the access hop priced from
+    ``tiers[0].phi_up/phi_down``, boundary ``t >= 1`` the fronthaul hop
+    priced from ``tiers[t]``. ``overrides`` (link name -> bits, e.g. the
+    measured codec streams) take precedence over the analytic
+    ``lp.payload(φ)`` — the same contract ``hfl_latency``'s
+    ``payload_bits`` dict has for the depth-2 links, extended to every
+    boundary of the tree."""
+    from repro.comm.accounting import boundary_links
+
+    ov = overrides or {}
+    out = {}
+    for t, tc in enumerate(tiers):
+        ul, dl = boundary_links(t)
+        out[ul] = ov.get(ul, lp.payload(tc.phi_up))
+        out[dl] = ov.get(dl, lp.payload(tc.phi_down))
+    return out
+
+
 def fl_latency(
     topo: HCNTopology, mu_pos, lp: LatencyParams, *,
     phi_ul=0.0, phi_dl=0.0, ul_bits=None, dl_bits=None,

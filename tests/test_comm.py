@@ -291,6 +291,66 @@ def test_ledger_links_and_totals():
     assert s["bits_per_param_mean"] == pytest.approx(1300 / (6 * 100))
 
 
+def test_link_graph_depth2_keys_byte_identical_to_legacy():
+    """Back-compat contract of the tier-boundary link graph: a default
+    (depth-2) ledger keeps the EXACT historical four link names — its
+    snapshot keys are byte-identical to the pre-refactor ones — and
+    ``link_names(2)`` IS the legacy LINKS tuple."""
+    from repro.comm.accounting import LINKS, boundary_links, link_names
+
+    assert link_names(2) == LINKS == ("mu_ul", "sbs_dl", "sbs_ul", "mbs_dl")
+    assert boundary_links(0) == ("mu_ul", "sbs_dl")
+    assert boundary_links(1) == ("sbs_ul", "mbs_dl")
+    assert boundary_links(3) == ("t3_ul", "t3_dl")
+    led = PayloadLedger(codec="bitmap", size=100)
+    assert led.links == LINKS
+    assert sorted(led.summary()) == sorted(
+        [f"bits_{l}" for l in LINKS] + [f"events_{l}" for l in LINKS]
+        + ["codec", "payload_size"])
+    # boundary 1 keeps the historic fronthaul names at ANY depth, so
+    # depth-2 metric/trace keys survive a deepened tree unchanged
+    assert link_names(4)[:6] == LINKS + ("t2_ul", "t2_dl")
+
+
+def test_link_graph_depth3_ledger_routes_boundaries():
+    from repro.comm.accounting import link_names
+
+    led = PayloadLedger(codec="bitmap", size=100, links=link_names(3))
+    led.record("mu_ul", 800, events=4)
+    led.record("sbs_ul", 300)
+    led.record("t2_ul", 70)
+    led.record("t2_dl", 30)
+    # access = boundary 0; fronthaul = every boundary above it
+    assert led.bits_access_total == 800
+    assert led.bits_fronthaul_total == 400
+    s = led.summary()
+    assert s["bits_t2_ul"] == 70 and s["events_t2_ul"] == 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 5), st.data())
+def test_property_per_tier_link_sums_equal_totals(depth, data):
+    """Hypothesis property of the link graph: for any depth and any
+    recorded traffic, the per-tier link sums reproduce the access and
+    fronthaul totals exactly (no bits leak between tier boundaries)."""
+    from repro.comm.accounting import ACCESS_LINKS, link_names
+
+    links = link_names(depth)
+    led = PayloadLedger(codec="bitmap", size=100, links=links)
+    for link in links:
+        n = data.draw(st.integers(0, 4), label=f"events_{link}")
+        for _ in range(n):
+            led.record(link, data.draw(
+                st.floats(0, 1e12, allow_nan=False), label=link))
+    s = led.summary()
+    assert led.bits_access_total == sum(
+        s[f"bits_{l}"] for l in ACCESS_LINKS)
+    assert led.bits_fronthaul_total == sum(
+        s[f"bits_{l}"] for l in links if l not in ACCESS_LINKS)
+    assert led.bits_access_total + led.bits_fronthaul_total \
+        == pytest.approx(sum(s[f"bits_{l}"] for l in links))
+
+
 def _measured_engine(discipline="lockstep", codec="delta-varint", **hfl_kw):
     kw = dict(num_clusters=3, mus_per_cluster=2, period=2,
               sync_mode="sparse", payload_accounting="measured", codec=codec)

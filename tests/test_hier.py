@@ -315,6 +315,88 @@ def test_3tier_async_mixed_edges_run_on_own_clocks():
     assert trace.meta["bits_fronthaul_total"] > 0
 
 
+def test_hier_deadline_middle_tier_drops_stragglers():
+    """Per-tier disciplines without the legacy fleet-wide knob: the
+    hier-deadline scenario puts the DEADLINE discipline on tiers[1], so
+    straggler MUs drop at the round deadline (their sub-carriers
+    reclaimed by survivors) while the root keeps its lockstep cadence."""
+    scn = get_scenario("hier-deadline")
+    hfl = apply_hfl_overrides(scn, HFLConfig())
+    assert hfl.tiers[1].discipline == "deadline"
+    assert scn.sim.discipline == "lockstep"  # the legacy knob stays off
+    engine = build_engine(scn, hfl, lp=LatencyParams(model_params=1e5),
+                          seed=0)
+    state, train, sync = _setup(hfl)
+    state, trace = engine.run(state, train, sync, _mu_batches(hfl), 8)
+    syncs = [r for r in trace.rows if r["kind"] == "sync"]
+    # the tree cadence survives the deadline discipline
+    assert [r["tier"] for r in syncs] == [1, 2, 1, 2]
+    assert all(r["deadline_s"] > 0 for r in syncs)
+    # sigma=1 compute tail + factor 1.25: some MU gets dropped somewhere
+    assert any(r["dropped"] > 0 for r in syncs)
+    assert np.isfinite(np.asarray(state.params["w"])).all()
+
+
+def test_deadline_above_boundary1_rejected():
+    scn = get_scenario("hier-3tier")
+    base = apply_hfl_overrides(scn, HFLConfig())
+    hfl = dataclasses.replace(base, tiers=(
+        base.tiers[0], base.tiers[1],
+        dataclasses.replace(base.tiers[2], discipline="deadline")))
+    engine = build_engine(scn, hfl, lp=LatencyParams(model_params=1e5),
+                          seed=0)
+    state, train, sync = _setup(hfl)
+    with pytest.raises(ValueError, match="boundary 1"):
+        engine.run(state, train, sync, _mu_batches(hfl), 8)
+
+
+def test_async_below_lockstep_rejected():
+    """A synchronous barrier cannot run above children on their own
+    clocks: async boundaries must form a contiguous top suffix."""
+    scn = get_scenario("hier-3tier")
+    base = apply_hfl_overrides(scn, HFLConfig())
+    hfl = dataclasses.replace(base, tiers=(
+        base.tiers[0],
+        dataclasses.replace(base.tiers[1], discipline="async"),
+        base.tiers[2]))
+    engine = build_engine(scn, hfl, lp=LatencyParams(model_params=1e5),
+                          seed=0)
+    state, train, sync = _setup(hfl)
+    with pytest.raises(ValueError, match="contiguous top suffix"):
+        engine.run(state, train, sync, _mu_batches(hfl), 8)
+
+
+def test_fully_async_depth3_counted_pushes():
+    """cut=1: every boundary is clock-free. Each CLUSTER is its own
+    scheduling unit pushing at boundary 1 every round; a tier-1 parent
+    that has received ``tiers[2].period`` pushes fires its own push at
+    boundary 2 — the counted cascade of the unit scheduler."""
+    scn = get_scenario("hier-3tier")
+    base = apply_hfl_overrides(scn, HFLConfig())
+    hfl = dataclasses.replace(base, tiers=(
+        base.tiers[0],
+        dataclasses.replace(base.tiers[1], discipline="async"),
+        dataclasses.replace(base.tiers[2], discipline="async")))
+    scn = dataclasses.replace(
+        scn, sim=dataclasses.replace(scn.sim, compute_sigma=0.6))
+    engine = build_engine(scn, hfl, lp=LatencyParams(model_params=1e5),
+                          seed=0)
+    state, train, sync = _setup(hfl)
+    state, trace = engine.run(state, train, sync, _mu_batches(hfl), 8)
+    syncs = [r for r in trace.rows if r["kind"] == "sync"]
+    t1 = [r for r in syncs if r["tier"] == 1]
+    t2 = [r for r in syncs if r["tier"] == 2]
+    N, rounds = hfl.num_clusters, 8 // hfl.tiers[1].period
+    # every cluster-unit pushes at boundary 1 every round; each tier-1
+    # parent receives 2 children x rounds pushes and fires every
+    # tiers[2].period of them
+    assert len(t1) == N * rounds
+    assert len(t2) == N * rounds // hfl.tiers[2].period
+    for r in syncs:
+        assert r["staleness"] >= 0 and 0.0 < r["weight"] <= 1.0
+    assert np.isfinite(np.asarray(state.params["w"])).all()
+
+
 def test_async_mixed_null_wireless_via_run_hfl():
     """core.schedule.run_hfl (no fleet, no radio) drives the mixed
     hierarchy too: the engine adopts the sync step's own config."""
@@ -327,12 +409,53 @@ def test_async_mixed_null_wireless_via_run_hfl():
     assert np.isfinite(np.asarray(state.params["w"])).all()
 
 
-def test_measured_accounting_rejected_beyond_depth2():
+def test_measured_accounting_depth3_per_tier_ledger():
+    """Depth-3 measured accounting end-to-end: the hier probe measures
+    every cascade boundary's REAL payloads, each boundary lands on its
+    own ledger link (boundary 1 keeps the historic sbs_ul/mbs_dl names,
+    boundary 2 gets t2_ul/t2_dl), and the per-link sums reproduce the
+    access/fronthaul totals exactly."""
     scn = get_scenario("hier-3tier")
     hfl = apply_hfl_overrides(
         scn, HFLConfig(payload_accounting="measured"))
+    engine = build_engine(scn, hfl, lp=LatencyParams(model_params=1e5),
+                          seed=0)
+    state, train, sync = _setup(hfl)
+    state, trace = engine.run(state, train, sync, _mu_batches(hfl), 8)
+    meta = trace.meta
+    for link in ("mu_ul", "sbs_dl", "sbs_ul", "mbs_dl", "t2_ul", "t2_dl"):
+        assert meta[f"bits_{link}"] > 0, link
+        assert meta[f"events_{link}"] > 0, link
+    # H=2 over 8 steps -> 4 boundaries, the root (period 2) firing on 2:
+    # tier-1 uplinks charge A0 children per boundary, the root's A1
+    assert meta["events_sbs_ul"] == 4 * hfl.agg_count(0)
+    assert meta["events_t2_ul"] == 2 * hfl.agg_count(1)
+    assert meta["bits_fronthaul_total"] == pytest.approx(
+        meta["bits_sbs_ul"] + meta["bits_mbs_dl"]
+        + meta["bits_t2_ul"] + meta["bits_t2_dl"])
+    assert meta["bits_access_total"] == pytest.approx(
+        meta["bits_mu_ul"] + meta["bits_sbs_dl"])
+    # per-tier rows carry the measured boundary payloads
+    syncs = [r for r in trace.rows if r["kind"] == "sync"]
+    assert all("bits_sbs_ul" in r for r in syncs)
+    assert all(("bits_t2_ul" in r) == (r["tier"] == 2) for r in syncs)
+
+
+def test_measured_accounting_rejected_above_async_cut():
+    """The residual restriction: measured payloads of per-unit async
+    pushes are not probed yet — depth > 2 measured needs a fully
+    synchronous tier tree."""
+    scn = get_scenario("hier-3tier")
+    base = apply_hfl_overrides(
+        scn, HFLConfig(payload_accounting="measured"))
+    hfl = dataclasses.replace(base, tiers=(
+        base.tiers[0], base.tiers[1],
+        dataclasses.replace(base.tiers[2], discipline="async")))
+    engine = build_engine(scn, hfl, lp=LatencyParams(model_params=1e5),
+                          seed=0)
+    state, train, sync = _setup(hfl)
     with pytest.raises(ValueError, match="measured"):
-        build_engine(scn, hfl, lp=LatencyParams(model_params=1e5), seed=0)
+        engine.run(state, train, sync, _mu_batches(hfl), 8)
 
 
 # ---------------------------------------------------------------------------
